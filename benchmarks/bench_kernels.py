@@ -1,0 +1,87 @@
+"""Kernel / detection-path micro-benchmarks.
+
+  detection_overhead   sketch (O(k) symbol) vs full replica compare (O(d))
+                       over gradient sizes — the beyond-paper detection
+                       optimization's compute-side cost (DESIGN.md §7.1);
+                       the COMMUNICATION win (k/d) is derived analytically.
+  kernel_micro         us/call of each Pallas kernel in interpret mode
+                       (CPU validation harness — NOT TPU perf) + the XLA
+                       blockwise attention for reference.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import detection
+from repro.kernels import ops
+
+
+def _timeit(fn, reps=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def detection_overhead() -> list[tuple]:
+    rows = []
+    k = 256
+    sk = jax.jit(lambda g: detection.hash_sign_sketch(g, 1234, k))
+    for d in (100_000, 1_000_000, 10_000_000):
+        g = jax.random.normal(jax.random.PRNGKey(0), (d,), jnp.float32)
+        reps = jnp.stack([g, g, g, g])
+        us_sketch = _timeit(lambda: sk(g).block_until_ready())
+        full = jax.jit(
+            lambda r: (jnp.abs(r - r[0:1]) > 1e-5 * (1 + jnp.abs(r[0:1]))).any()
+        )
+        us_full = _timeit(lambda: full(reps).block_until_ready())
+        rows.append((f"detect_sketch[d={d}]", us_sketch,
+                     f"comm_bytes={4 * k}"))
+        rows.append((f"detect_full[d={d}]", us_full,
+                     f"comm_bytes={4 * d};ratio={d / k:.0f}x"))
+    return rows
+
+
+def kernel_micro() -> list[tuple]:
+    rows = []
+    g = jax.random.normal(jax.random.PRNGKey(0), (1_000_000,), jnp.float32)
+    us = _timeit(lambda: ops.sketch(g, 7).block_until_ready(), reps=3)
+    rows.append(("pallas_sketch[d=1e6,interpret]", us,
+                 f"GBps={4e6 / us / 1e3:.2f}"))
+
+    reps = jnp.tile(g[None, :100_000], (7, 1))
+    us = _timeit(lambda: ops.pairwise_relmax(reps).block_until_ready(), reps=3)
+    rows.append(("pallas_vote_relmax[R=7,d=1e5,interpret]", us,
+                 f"GBps={7 * 4e5 / us / 1e3:.2f}"))
+
+    C = jax.random.normal(jax.random.PRNGKey(1), (4, 4), jnp.float32)
+    G = jax.random.normal(jax.random.PRNGKey(2), (4, 200_000), jnp.float32)
+    us = _timeit(lambda: ops.coded_encode(C, G).block_until_ready(), reps=3)
+    rows.append(("pallas_coded_encode[4x4x2e5,interpret]", us,
+                 f"GFLOPs={2 * 4 * 4 * 2e5 / us / 1e3:.2f}"))
+
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 256, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 256, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 256, 2, 64), jnp.bfloat16)
+    us = _timeit(
+        lambda: ops.flash_attention(q, k, v, bq=128, bk=128).block_until_ready(),
+        reps=2,
+    )
+    rows.append(("pallas_flash_attn[256tok,interpret]", us, "oracle=ref.mha_ref"))
+
+    from repro.models.attention import blockwise_attention
+
+    ba = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, q_block=128,
+                                                     kv_block=128))
+    us = _timeit(lambda: ba(q, k, v).block_until_ready(), reps=3)
+    rows.append(("xla_blockwise_attn[256tok]", us, "prod_path"))
+    return rows
+
+
+ALL = [detection_overhead, kernel_micro]

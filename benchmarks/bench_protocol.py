@@ -1,0 +1,186 @@
+"""Protocol-level benchmarks reproducing the paper's analytical results.
+
+One function per paper table/figure/equation:
+
+  efficiency_vs_q        eq. (2): measured E[efficiency] vs the lower bound
+                         1 - q*2f/(2f+1), over a q grid  [Fig. 3 scheme]
+  scheme_comparison      §2/§3: randomized vs deterministic vs DRACO vs
+                         gradient filters vs unprotected — exactness,
+                         efficiency, identification  [the paper's core table]
+  identification_time    §4.2: empirical time-to-identification vs the
+                         (1 - q p)^t almost-sure bound
+  adaptive_trace         §4.3: λ_t/q_t* trajectory; boundary conditions
+  fig2_code              Fig. 2: linear detection code — detection works,
+                         communication = 1/2 of replication's
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import adaptive
+from repro.core.simulation import run_protocol
+
+F, N = 2, 8
+
+
+def _timeit(fn, reps=3):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def efficiency_vs_q() -> list[tuple]:
+    rows = []
+    detail = []
+    for q in (0.05, 0.1, 0.2, 0.3, 0.5, 0.8, 1.0):
+        effs = []
+        for seed in range(5):
+            r = run_protocol(byz=[2, 5], attack="sign_flip", steps=150, q=q,
+                             seed=seed)
+            effs.append(r.efficiency)
+        measured = float(np.mean(effs))
+        bound = adaptive.com_eff(q, F)
+        detail.append({"q": q, "measured": measured, "bound_eq2": bound})
+        # measured efficiency must sit ON/ABOVE the eq-2 lower bound
+        # (elimination pushes it above once both byz workers are caught)
+        rows.append((f"efficiency_vs_q[q={q}]", 0.0,
+                     f"meas={measured:.4f};bound={bound:.4f}"))
+    gaps = [d["measured"] - d["bound_eq2"] for d in detail]
+    rows.append(("efficiency_vs_q[min_gap_above_bound]", 0.0,
+                 f"{min(gaps):+.4f}"))
+    _dump("efficiency_vs_q", detail)
+    return rows
+
+
+def scheme_comparison() -> list[tuple]:
+    modes = [
+        ("none", dict(mode="none")),
+        ("filter_median", dict(mode="filter:median")),
+        ("filter_krum", dict(mode="filter:krum")),
+        ("draco", dict(mode="draco")),
+        ("deterministic", dict(mode="deterministic")),
+        ("randomized_q0.2", dict(mode="randomized", q=0.2)),
+        ("adaptive", dict(mode="randomized", q=None)),
+    ]
+    rows, detail = [], []
+    for name, kw in modes:
+        us = []
+        errs, effs, kappas = [], [], []
+        for seed in range(3):
+            t0 = time.perf_counter()
+            r = run_protocol(byz=[2, 5], attack="sign_flip", steps=300,
+                             seed=seed, **kw)
+            us.append((time.perf_counter() - t0) * 1e6 / 300)
+            errs.append(r.final_error)
+            effs.append(r.efficiency)
+            kappas.append(r.state.kappa)
+        d = {
+            "scheme": name,
+            "final_error": float(np.mean(errs)),
+            "efficiency": float(np.mean(effs)),
+            "identified": float(np.mean(kappas)),
+            "exact": bool(np.mean(errs) < 1e-3),
+        }
+        detail.append(d)
+        rows.append((
+            f"scheme[{name}]", float(np.mean(us)),
+            f"err={d['final_error']:.2e};eff={d['efficiency']:.3f};"
+            f"kappa={d['identified']:.1f}",
+        ))
+    # headline claims
+    eff = {d["scheme"]: d["efficiency"] for d in detail}
+    rows.append(("scheme[det_vs_draco_eff_ratio]", 0.0,
+                 f"{eff['deterministic'] / eff['draco']:.2f}"))
+    rows.append(("scheme[rand_vs_draco_eff_ratio]", 0.0,
+                 f"{eff['randomized_q0.2'] / eff['draco']:.2f}"))
+    _dump("scheme_comparison", detail)
+    return rows
+
+
+def identification_time() -> list[tuple]:
+    q, p = 0.3, 0.8
+    times = []
+    for seed in range(20):
+        r = run_protocol(byz=[4], attack="drift", steps=200, q=q,
+                         p_tamper=p, seed=seed)
+        times.append(r.identify_step.get(4, 200))
+    times = np.asarray(times)
+    # bound: P(unidentified after t) <= (1-qp)^t; median bound:
+    t_med_bound = np.log(0.5) / np.log(1 - q * p)
+    detail = {
+        "times": times.tolist(),
+        "median": float(np.median(times)),
+        "p95": float(np.percentile(times, 95)),
+        "median_bound": float(t_med_bound),
+        "all_identified": bool((times < 200).all()),
+    }
+    _dump("identification_time", detail)
+    return [
+        ("ident_time[median]", 0.0,
+         f"{detail['median']:.1f};bound={t_med_bound:.1f}"),
+        ("ident_time[p95]", 0.0, f"{detail['p95']:.1f}"),
+        ("ident_time[all_identified]", 0.0, str(detail["all_identified"])),
+    ]
+
+
+def adaptive_trace() -> list[tuple]:
+    r = run_protocol(byz=[2, 5], attack="sign_flip", steps=300, q=None,
+                     p_tamper=0.8)
+    qt = np.asarray(r.q_trace)
+    detail = {
+        "q_first10": qt[:10].tolist(),
+        "q_last10": qt[-10:].tolist(),
+        "kappa": r.state.kappa,
+        "final_error": r.final_error,
+    }
+    _dump("adaptive_trace", detail)
+    return [
+        ("adaptive[q_initial]", 0.0, f"{qt[0]:.3f}"),
+        ("adaptive[q_final]", 0.0, f"{qt[-1]:.3f}"),  # 0 after κ=f (§4.3)
+        ("adaptive[exact]", 0.0, str(r.final_error < 1e-3)),
+    ]
+
+
+def fig2_code() -> list[tuple]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.codes import Fig2Code, ReplicationCode
+
+    d = 4096
+    g1, g2, g3 = jax.random.normal(jax.random.PRNGKey(0), (3, d))
+    c = [
+        Fig2Code.encode(0, g1, g2),
+        Fig2Code.encode(1, g2, g3),
+        Fig2Code.encode(2, g3, g1),
+    ]
+    clean = bool(Fig2Code.check(*c))
+    c_bad = [c[0], c[1] + 0.1, c[2]]
+    detected = not bool(Fig2Code.check(*c_bad))
+    ok = bool(
+        jnp.allclose(Fig2Code.decode(*c), g1 + g2 + g3, rtol=1e-5, atol=1e-5)
+    )
+    # communication: each worker sends ONE d-vector vs f+1=2 gradient
+    # replicas it computed (replication symbol = its gradient tuple)
+    comm_ratio = 1 / 2
+    us = _timeit(lambda: Fig2Code.check(*c).block_until_ready())
+    return [
+        ("fig2[detects_single_fault]", us, str(clean and detected and ok)),
+        ("fig2[comm_vs_replication]", 0.0, f"{comm_ratio:.2f}"),
+    ]
+
+
+def _dump(name: str, obj) -> None:
+    import os
+
+    os.makedirs("results/bench", exist_ok=True)
+    with open(f"results/bench/{name}.json", "w") as fh:
+        json.dump(obj, fh, indent=1)
+
+
+ALL = [efficiency_vs_q, scheme_comparison, identification_time,
+       adaptive_trace, fig2_code]

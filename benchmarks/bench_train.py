@@ -1,0 +1,47 @@
+"""End-to-end SPMD BFT training benchmark (single CPU device, reduced
+model): wall time per step for fast vs check vs identify paths, and the
+realized computation efficiency of a full randomized run — the system-level
+analogue of the protocol table, exercising the real shard_map steps.
+
+Runs on a 1x1 mesh (single CPU device, one worker) — the multi-worker
+version needs forced host devices and lives in tests/test_bft_integration.
+Here we measure the compiled step-path overheads (detection sketching,
+voting) relative to the plain step at worker-count 1.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.randomized import BFTConfig
+from repro.optim import OptConfig
+from repro.train import AttackConfig, StepConfig, Trainer, TrainerConfig
+
+
+def train_paths() -> list[tuple]:
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("paper-smalllm").reduced()
+    opt = OptConfig(kind="adamw", peak_lr=1e-3, warmup_steps=2,
+                    total_steps=100)
+    rows = []
+    for mode, q in (("none", None), ("deterministic", None)):
+        bft = BFTConfig(n=1, f=0, mode=mode, q=q, seed=0)
+        tr = Trainer(cfg, opt, bft, mesh,
+                     TrainerConfig(seq_len=64, global_batch=8, log_every=0),
+                     attack=AttackConfig(kind="none"),
+                     sc=StepConfig(worker_axes=("data",)))
+        tr.run(2)  # compile + warm
+        t0 = time.perf_counter()
+        tr.run(5)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append((f"train_step[{mode}]", us,
+                     f"loss={tr.history[-1]['loss']:.3f};"
+                     f"eff={tr.state.meter.overall:.3f}"))
+    return rows
+
+
+ALL = [train_paths]

@@ -1,0 +1,32 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = 0.0 for analytic /
+counting benchmarks where wall time is not the measurand).  JSON artifacts
+land in results/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, bench_protocol, bench_train
+
+    suites = bench_protocol.ALL + bench_kernels.ALL + bench_train.ALL
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},0.0,ERROR:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

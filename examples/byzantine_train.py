@@ -1,0 +1,99 @@
+"""End-to-end BFT training driver (deliverable: train a ~100M-param model
+under live Byzantine attacks with the randomized reactive-redundancy
+scheme).
+
+8 SPMD workers are forced onto the host (the same binary runs unchanged on
+a real 8-chip slice).  Byzantine workers 2 and 5 sign-flip their gradients
+with probability 0.6 per iteration; the master checks with adaptive q*
+(paper §4.3), reactively identifies and eliminates them, and training
+proceeds to convergence with computation efficiency ~1.
+
+    PYTHONPATH=src python examples/byzantine_train.py                # smoke (CPU, ~2 min)
+    PYTHONPATH=src python examples/byzantine_train.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/byzantine_train.py --restore     # restart from ckpt
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.randomized import BFTConfig
+from repro.optim import OptConfig
+from repro.train import AttackConfig, StepConfig, Trainer, TrainerConfig
+
+
+def build_cfg(preset: str):
+    base = get_config("paper-smalllm")
+    if preset == "smoke":
+        return base.reduced()
+    if preset == "100m":
+        # ~110M params: 12L x 768d x 12H, 32k vocab (GPT-2-small scale)
+        return dataclasses.replace(
+            base, name="bft-100m", num_layers=12, d_model=768, num_heads=12,
+            num_kv_heads=12, head_dim=64, d_ff=3072, vocab_size=32768,
+        )
+    raise ValueError(preset)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "100m"])
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--f", type=int, default=2)
+    ap.add_argument("--attack", default="sign_flip")
+    ap.add_argument("--detection", default="sketch", choices=["sketch", "full"])
+    ap.add_argument("--ckpt-dir", default="/tmp/bft_ckpt")
+    ap.add_argument("--restore", action="store_true")
+    args = ap.parse_args()
+
+    n = len(jax.devices())
+    assert n >= 2 * args.f + 1, f"need >= {2*args.f+1} workers, have {n}"
+    mesh = jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = build_cfg(args.preset)
+    seq = args.seq_len or (64 if args.preset == "smoke" else 512)
+
+    trainer = Trainer(
+        cfg,
+        OptConfig(kind="adamw", peak_lr=3e-4, warmup_steps=20,
+                  total_steps=max(args.steps, 100)),
+        BFTConfig(n=n, f=args.f, mode="randomized", q=None,  # adaptive §4.3
+                  p_assumed=0.6, seed=0),
+        mesh,
+        TrainerConfig(seq_len=seq, global_batch=4 * n, log_every=5,
+                      checkpoint_dir=args.ckpt_dir, checkpoint_every=10),
+        attack=AttackConfig(kind=args.attack, p_tamper=0.6, scale=5.0),
+        sc=StepConfig(worker_axes=("data",), detection=args.detection),
+        true_byzantine=np.isin(np.arange(n), [2, 5]),
+    )
+    if args.restore:
+        step = trainer.restore_latest()
+        print(f"[restore] resumed from step {step}")
+
+    remaining = args.steps - trainer.state.step
+    if remaining > 0:
+        trainer.run(remaining)
+
+    st = trainer.state
+    print("\n=== summary ===")
+    print(f"params (M)            : {sum(int(np.prod(p.shape)) for p in jax.tree.leaves(trainer.params)) / 1e6:.1f}")
+    print(f"loss                  : {trainer.history[0]['loss']:.3f} -> {trainer.history[-1]['loss']:.3f}")
+    print(f"identified Byzantine  : {sorted(np.flatnonzero(st.identified).tolist())} (truth: [2, 5])")
+    print(f"computation efficiency: {st.meter.overall:.3f}")
+    print(f"checks / identifies   : {st.meter.check_iterations} / {st.meter.identify_iterations}")
+    assert set(np.flatnonzero(st.identified)) <= {2, 5}, "false positive!"
+
+
+if __name__ == "__main__":
+    main()

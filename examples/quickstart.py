@@ -1,0 +1,57 @@
+"""Quickstart: Byzantine fault-tolerant training in ~30 lines.
+
+Runs the paper's randomized reactive-redundancy scheme on the convex
+testbed (exact w* known), then a few SPMD train steps of a small LM —
+all on whatever devices are available (CPU included).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.simulation import run_protocol
+
+
+def main() -> None:
+    print("=== 1. the paper's protocol on least-squares (exact w*) ===")
+    r = run_protocol(
+        n=8, f=2, byz=[2, 5], attack="sign_flip",
+        q=None,                      # None -> adaptive q* (paper §4.3)
+        steps=300,
+    )
+    print(f"final ||w - w*||        : {r.final_error:.2e}  (exact fault-tolerance)")
+    print(f"identified Byzantine    : {sorted(np.flatnonzero(r.state.identified).tolist())} (truth: [2, 5])")
+    print(f"computation efficiency  : {r.efficiency:.3f}  (DRACO would be {1/5:.3f})")
+    print(f"adaptive q: start={r.q_trace[0]:.2f} -> end={r.q_trace[-1]:.2f} (0 after all identified)")
+
+    print("\n=== 2. the same protocol driving a real SPMD LM train step ===")
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.randomized import BFTConfig
+    from repro.optim import OptConfig
+    from repro.train import AttackConfig, StepConfig, Trainer, TrainerConfig
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("paper-smalllm").reduced()
+    trainer = Trainer(
+        cfg,
+        OptConfig(kind="adamw", peak_lr=1e-3, warmup_steps=5, total_steps=100),
+        BFTConfig(n=n_dev, f=0 if n_dev < 3 else 1, mode="randomized", q=0.3),
+        mesh,
+        TrainerConfig(seq_len=64, global_batch=8 * n_dev, log_every=2),
+        attack=AttackConfig(kind="none"),
+        sc=StepConfig(worker_axes=("data",)),
+    )
+    trainer.run(6)
+    print(f"overall efficiency: {trainer.state.meter.overall:.3f}")
+    print("done — see examples/byzantine_train.py for the full driver.")
+
+
+if __name__ == "__main__":
+    main()

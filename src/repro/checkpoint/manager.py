@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing.
+
+Atomicity: a checkpoint is written to ``<dir>/tmp.<step>`` and renamed to
+``<dir>/step_<step>`` only after every array and the metadata manifest have
+been fsync'd — a crash mid-write can never corrupt the latest checkpoint.
+Restart picks the newest complete step directory.
+
+Contents: params + optimizer state (leaf-per-file .npy addressed by pytree
+path), the BFT ProtocolState (active/identified masks, reliability counts,
+RNG state — restart replays the identical check schedule), and the data
+cursor.  Restoring re-places leaves with the caller-provided shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import re
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save(directory: str, step: int, *, params, opt_state, protocol_state=None,
+         extra: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest = {"step": step, "arrays": {}}
+    for group, tree in (("params", params), ("opt_state", opt_state)):
+        gdir = os.path.join(tmp, group)
+        os.makedirs(gdir, exist_ok=True)
+        for key, leaf in _flatten_with_paths(tree).items():
+            arr = np.asarray(jax.device_get(leaf))
+            logical_dtype = str(arr.dtype)
+            if arr.dtype.kind not in "fiub":  # ml_dtypes (bf16/f8): npy-unsafe
+                arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(gdir, fname), arr)
+            manifest["arrays"].setdefault(group, []).append(
+                {"key": key, "file": fname, "dtype": logical_dtype,
+                 "shape": list(arr.shape)}
+            )
+    if protocol_state is not None:
+        with open(os.path.join(tmp, "protocol.pkl"), "wb") as fh:
+            pickle.dump(protocol_state.state_dict(), fh)
+    with open(os.path.join(tmp, "extra.json"), "w") as fh:
+        json.dump(extra or {}, fh)
+    with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+        fh.flush()
+        os.fsync(fh.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+        and os.path.exists(os.path.join(directory, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def _unflatten_like(template, flat: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore(directory: str, step: int, *, params_template, opt_template,
+            shardings=None, opt_shardings=None, protocol_state=None):
+    """Load a checkpoint; templates define tree structure.  If shardings are
+    given, leaves are device_put accordingly (multi-host restore path)."""
+    cdir = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(cdir, "manifest.json")) as fh:
+        manifest = json.load(fh)
+
+    out = {}
+    for group, template, shards in (
+        ("params", params_template, shardings),
+        ("opt_state", opt_template, opt_shardings),
+    ):
+        flat = {}
+        for entry in manifest["arrays"].get(group, []):
+            arr = np.load(os.path.join(cdir, group, entry["file"]))
+            if str(arr.dtype) != entry["dtype"]:  # restore ml_dtypes view
+                import ml_dtypes
+
+                arr = arr.view(np.dtype(getattr(ml_dtypes, entry["dtype"])))
+            flat[entry["key"]] = arr
+        tree = _unflatten_like(template, flat)
+        if shards is not None:
+            tree = jax.tree.map(jax.device_put, tree, shards)
+        out[group] = tree
+
+    ppath = os.path.join(cdir, "protocol.pkl")
+    if protocol_state is not None and os.path.exists(ppath):
+        with open(ppath, "rb") as fh:
+            protocol_state.load_state_dict(pickle.load(fh))
+    with open(os.path.join(cdir, "extra.json")) as fh:
+        extra = json.load(fh)
+    return out["params"], out["opt_state"], extra
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; save-every-k policy."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+
+    def maybe_save(self, step: int, **kw) -> str | None:
+        if self.every <= 0 or step % self.every:
+            return None
+        path = save(self.directory, step, **kw)
+        self._gc()
+        return path
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(m.group(1))
+            for d in os.listdir(self.directory)
+            if (m := re.fullmatch(r"step_(\d+)", d))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )

@@ -1,0 +1,21 @@
+"""Core BFT coding schemes — the paper's contribution.
+
+Randomized reactive redundancy for Byzantine fault-tolerant parallelized
+SGD: replica-group assignment, detection codes (replication / Fig-2 linear /
+sketch-compressed), reactive 2f+1 majority identification, the randomized
+check schedule with the closed-form adaptive q* (eq. 4-5), plus the DRACO
+and gradient-filter baselines the paper compares against.
+"""
+from repro.core import (  # noqa: F401
+    adaptive,
+    assignment,
+    byzantine,
+    codes,
+    detection,
+    draco,
+    efficiency,
+    filters,
+    identification,
+    randomized,
+)
+from repro.core.randomized import BFTConfig, ProtocolState  # noqa: F401

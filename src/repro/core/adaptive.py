@@ -1,0 +1,70 @@
+"""Adaptive fault-check probability (paper §4.3, eqs. 4–5).
+
+The per-iteration check probability q_t* minimizes
+
+    (1 - λ_t) (1 - comEff_t(q))^2  +  λ_t (probF_t(q))^2         (eq. 4)
+
+with  comEff_t(q) = (2 f_t (1-q) + 1) / (2 f_t + 1)
+      probF_t(q)  = (1 - (1-p)^{f_t}) (1 - q)
+      λ_t         = 1 - exp(-ℓ_t)                                 (eq. 5)
+
+Substituting a = 2f_t/(2f_t+1) and b = 1-(1-p)^{f_t}, the objective is
+(1-λ) a² q² + λ b² (1-q)², a strictly convex quadratic whose minimizer has
+the closed form
+
+    q_t* = λ b² / ((1-λ) a² + λ b²),  clipped to [0, 1],
+
+which this module implements exactly (no numerical optimization needed).
+The paper's boundary conditions hold by construction and are unit-tested:
+ℓ_t → ∞ ⇒ λ→1 ⇒ q*→1;  p = 0 or f_t = 0 ⇒ b = 0 ⇒ q* = 0.
+"""
+from __future__ import annotations
+
+import math
+
+
+def com_eff(q: float, f_t: int) -> float:
+    """Expected computation efficiency lower bound (paper eq. 2)."""
+    if f_t <= 0:
+        return 1.0
+    return (2 * f_t * (1 - q) + 1) / (2 * f_t + 1)
+
+
+def prob_faulty_update(q: float, f_t: int, p: float) -> float:
+    """Probability of a faulty parameter update (paper eq. 3)."""
+    return (1 - (1 - p) ** f_t) * (1 - q)
+
+
+def lam_from_loss(loss: float) -> float:
+    """λ_t = 1 - e^{-ℓ_t} (paper eq. 5)."""
+    return 1.0 - math.exp(-max(0.0, float(loss)))
+
+
+def q_star(f_t: int, p: float, lam: float) -> float:
+    """Closed-form minimizer of eq. 4, clipped to [0, 1]."""
+    if f_t <= 0:
+        return 0.0
+    a = 2.0 * f_t / (2.0 * f_t + 1.0)
+    b = 1.0 - (1.0 - p) ** f_t
+    if b == 0.0:
+        return 0.0
+    lam = min(max(lam, 0.0), 1.0)
+    denom = (1.0 - lam) * a * a + lam * b * b
+    if denom == 0.0:  # lam == 0 and b == 0 handled above; lam==0 -> q*=0
+        return 0.0
+    return min(1.0, max(0.0, lam * b * b / denom))
+
+
+def q_star_numeric(f_t: int, p: float, lam: float, grid: int = 20001) -> float:
+    """Brute-force minimizer of eq. 4 (validation oracle for q_star)."""
+    if f_t <= 0:
+        return 0.0
+    best_q, best_v = 0.0, float("inf")
+    for i in range(grid):
+        q = i / (grid - 1)
+        v = (1 - lam) * (1 - com_eff(q, f_t)) ** 2 + lam * prob_faulty_update(
+            q, f_t, p
+        ) ** 2
+        if v < best_v:
+            best_q, best_v = q, v
+    return best_q

@@ -1,0 +1,126 @@
+"""Shard -> worker replica-group assignment (paper §4.1).
+
+The global batch of an iteration is cut into micro-shards; an *assignment*
+says which worker computes which shard and with what aggregation weight.
+
+ * fast mode (randomized scheme's default path): every active worker gets
+   its own shard — replication r=1, computation efficiency 1.
+ * check mode: shards are assigned to groups of r = f_t + 1 workers
+   (f-fault *detection*); all group members compute the same shard.
+ * identify mode (reactive redundancy): r = 2 f_t + 1 workers per shard —
+   enough replicas for majority voting (fault *identification*).
+
+Assignments are built host-side with numpy (they change only when workers
+are eliminated / fail) and passed to the jitted steps as plain arrays.
+
+Eliminated or crashed workers keep a syntactic slot (SPMD shape stability)
+but carry weight 0 and are never members of any group — the same remap path
+serves Byzantine elimination and crash/straggler exclusion (elastic scaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """Arrays are all length-n (the data-axis size)."""
+
+    shard_of_worker: np.ndarray   # (n,) int32: shard computed by worker w
+    group_of_worker: np.ndarray   # (n,) int32: replica group id (-1 = idle)
+    weight: np.ndarray            # (n,) float32: aggregation weight
+    num_shards: int               # m: shards used for the update
+    replication: int              # r: replicas per shard
+    shard_sizes: np.ndarray       # (n,) int32: microbatch rows per shard
+
+    @property
+    def n(self) -> int:
+        return len(self.shard_of_worker)
+
+    def gradients_computed(self) -> int:
+        return int((self.group_of_worker >= 0).sum())
+
+    def gradients_used(self) -> int:
+        return self.num_shards
+
+    def efficiency(self) -> float:
+        return self.gradients_used() / max(1, self.gradients_computed())
+
+
+def build_assignment(active: np.ndarray, replication: int,
+                     rng: np.random.Generator | None = None) -> Assignment:
+    """Group the active workers into replica groups of size ``replication``.
+
+    active: (n,) bool.  Shards = number of complete groups.  Leftover active
+    workers (n_active % r) idle for that iteration (weight 0); eliminated
+    workers always idle.
+
+    ``rng`` permutes the active workers before grouping.  Randomized group
+    membership is REQUIRED for almost-sure identification (§4.2): with a
+    fixed layout, workers beyond m*r would never be check-eligible and a
+    Byzantine worker parked there could tamper forever.  The generator is
+    the ProtocolState's seeded (and checkpointed) stream, so restarts
+    replay identical assignments.
+    """
+    n = len(active)
+    act_idx = np.flatnonzero(active)
+    if rng is not None:
+        act_idx = rng.permutation(act_idx)
+    r = max(1, replication)
+    m = len(act_idx) // r
+    if m == 0:
+        raise ValueError(
+            f"not enough active workers ({len(act_idx)}) for replication {r}"
+        )
+    shard = np.zeros(n, np.int32)
+    group = np.full(n, -1, np.int32)
+    weight = np.zeros(n, np.float32)
+    for g in range(m):
+        members = act_idx[g * r : (g + 1) * r]
+        shard[members] = g
+        group[members] = g
+        # each shard's gradient enters the mean once; split among replicas
+        # (replicas are identical when honest, so the mean is exact)
+        weight[members] = 1.0 / (r * m)
+    shard_sizes = np.zeros(n, np.int32)
+    return Assignment(shard, group, weight, m, r, shard_sizes)
+
+
+def fast_assignment(active: np.ndarray, rng=None) -> Assignment:
+    return build_assignment(active, 1, rng)
+
+
+def check_assignment(active: np.ndarray, f_t: int, rng=None) -> Assignment:
+    return build_assignment(active, f_t + 1, rng)
+
+
+def identify_assignment(active: np.ndarray, f_t: int, rng=None) -> Assignment:
+    return build_assignment(active, 2 * f_t + 1, rng)
+
+
+def group_members(a: Assignment) -> list[np.ndarray]:
+    """Worker indices per replica group."""
+    return [
+        np.flatnonzero(a.group_of_worker == g) for g in range(a.num_shards)
+    ]
+
+
+def shard_batch_indices(a: Assignment, global_batch: int) -> np.ndarray:
+    """(n, rows_per_shard) int32: batch rows each worker's shard covers.
+
+    The global batch is cut into ``num_shards`` contiguous shards; every
+    member of a replica group receives the same row-set.  rows_per_shard =
+    global_batch // num_shards (any remainder rows are dropped — SPMD shape
+    stability matters more than a few stray sequences).
+    """
+    m = a.num_shards
+    rows = global_batch // m
+    if rows == 0:
+        raise ValueError(f"global batch {global_batch} < {m} shards")
+    out = np.zeros((a.n, rows), np.int32)
+    for w in range(a.n):
+        s = a.shard_of_worker[w]
+        out[w] = np.arange(s * rows, (s + 1) * rows, dtype=np.int32)
+    return out

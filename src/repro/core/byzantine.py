@@ -1,0 +1,67 @@
+"""Byzantine attack models (simulation).
+
+A Byzantine worker may send an arbitrary symbol.  For experiments we model
+the standard attack families from the BFT-SGD literature; each attack is a
+pure function applied to the honest gradient *inside* the worker's shard_map
+body, gated by the worker's Byzantine mask and its per-iteration tampering
+coin (the paper's ``p_i``: worker i tampers independently w.p. >= p_i).
+
+Attacks operate on pytrees (the worker's gradient tree).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ATTACKS = (
+    "none",
+    "sign_flip",
+    "scale",
+    "noise",
+    "zero",
+    "inf",
+    "constant_drift",
+)
+
+
+def apply_attack(grad_tree, attack: str, key, scale: float = 10.0):
+    """Return the tampered gradient tree for a given attack kind (static)."""
+    if attack == "none":
+        return grad_tree
+    if attack == "sign_flip":
+        return jax.tree.map(lambda g: -scale * g, grad_tree)
+    if attack == "scale":
+        return jax.tree.map(lambda g: scale * g, grad_tree)
+    if attack == "zero":
+        return jax.tree.map(jnp.zeros_like, grad_tree)
+    if attack == "inf":
+        return jax.tree.map(lambda g: jnp.full_like(g, 1e30), grad_tree)
+    if attack == "noise":
+        leaves, treedef = jax.tree.flatten(grad_tree)
+        keys = jax.random.split(key, len(leaves))
+        noisy = [
+            g + scale * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+            for g, k in zip(leaves, keys)
+        ]
+        return treedef.unflatten(noisy)
+    if attack == "constant_drift":
+        # a stealthy attack: small constant bias pushing w away from w*
+        return jax.tree.map(lambda g: g + 0.1 * jnp.ones_like(g), grad_tree)
+    raise ValueError(f"unknown attack {attack!r}")
+
+
+def maybe_tamper(grad_tree, *, is_byz, key, attack: str, p_tamper: float,
+                 scale: float = 10.0):
+    """Tamper iff this worker is Byzantine AND its iteration coin fires.
+
+    ``is_byz`` is a traced scalar bool; the tampering coin uses ``key``.
+    The paper's analysis assumes worker i tampers independently each
+    iteration with probability at least p_i.
+    """
+    kc, ka = jax.random.split(key)
+    coin = jax.random.bernoulli(kc, p_tamper)
+    do = jnp.logical_and(is_byz, coin)
+    tampered = apply_attack(grad_tree, attack, ka, scale)
+    return jax.tree.map(
+        lambda t, g: jnp.where(do, t, g), tampered, grad_tree
+    ), do

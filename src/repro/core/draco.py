@@ -1,0 +1,25 @@
+"""DRACO baseline (Chen et al., 2018 [5]) — proactive fault-CORRECTION code.
+
+DRACO assigns every shard to 2f+1 workers in EVERY iteration and majority-
+votes, so it corrects up to f faults without any reactive round — at a
+computation efficiency of 1/(2f+1) always.  The paper's deterministic
+scheme halves that redundancy (detection needs only f+1; the extra f are
+reactive), and the randomized scheme amortizes it away almost entirely.
+
+Implemented by reusing the identification machinery: a DRACO iteration IS a
+permanent identify-mode iteration.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.assignment import Assignment, identify_assignment
+from repro.core.identification import vote_tree  # noqa: F401  (re-export)
+
+
+def draco_assignment(active: np.ndarray, f: int) -> Assignment:
+    return identify_assignment(active, f)
+
+
+def draco_efficiency(f: int) -> float:
+    return 1.0 / (2 * f + 1)

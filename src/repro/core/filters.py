@@ -1,0 +1,103 @@
+"""Gradient filters from the paper's related work (§3) and §5 combo.
+
+These are the *baselines* the paper positions against — they do NOT obtain
+exact fault-tolerance (they need distributional assumptions or redundant
+data), which our convergence benchmarks demonstrate empirically.  They can
+also be COMBINED with the randomized coding scheme (§5 'Gradient-filters'):
+the filter cheaply sanitizes updates between randomized checks, reducing
+the damage an unidentified Byzantine worker can do.
+
+All filters take stacked worker gradients (n, d) and return one (d,) vector.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mean(grads: jnp.ndarray) -> jnp.ndarray:
+    return grads.mean(axis=0)
+
+
+def coordinate_median(grads: jnp.ndarray) -> jnp.ndarray:
+    """Coordinate-wise median (Yin et al., 2018)."""
+    return jnp.median(grads, axis=0)
+
+
+def trimmed_mean(grads: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Coordinate-wise f-trimmed mean (Yin et al., 2018)."""
+    n = grads.shape[0]
+    if 2 * f >= n:
+        raise ValueError("need 2f < n for trimmed mean")
+    s = jnp.sort(grads, axis=0)
+    return s[f : n - f].mean(axis=0)
+
+
+def krum(grads: jnp.ndarray, f: int, m: int = 1) -> jnp.ndarray:
+    """(Multi-)KRUM (Blanchard et al., 2017).
+
+    Scores each worker by the sum of squared distances to its n-f-2 closest
+    peers; returns the mean of the m best-scored gradients.
+    """
+    n = grads.shape[0]
+    d2 = jnp.sum(
+        (grads[:, None, :] - grads[None, :, :]) ** 2, axis=-1
+    )  # (n, n)
+    d2 = d2 + jnp.eye(n) * 1e30
+    kth = max(1, n - f - 2)
+    nearest = jnp.sort(d2, axis=1)[:, :kth]
+    scores = nearest.sum(axis=1)
+    best = jnp.argsort(scores)[:m]
+    return grads[best].mean(axis=0)
+
+
+def geometric_median_of_means(grads: jnp.ndarray, num_buckets: int,
+                              iters: int = 16) -> jnp.ndarray:
+    """Geometric median of bucket means (Chen et al., 2017), via Weiszfeld."""
+    n, d = grads.shape
+    b = max(1, num_buckets)
+    usable = (n // b) * b
+    means = grads[:usable].reshape(b, -1, d).mean(axis=1)  # (b, d)
+    z = means.mean(axis=0)
+
+    def body(z, _):
+        dist = jnp.linalg.norm(means - z[None], axis=1)
+        w = 1.0 / jnp.maximum(dist, 1e-8)
+        return (means * w[:, None]).sum(axis=0) / w.sum(), None
+
+    z, _ = jax.lax.scan(body, z, None, length=iters)
+    return z
+
+
+def norm_clip(grads: jnp.ndarray, clip: float | None = None) -> jnp.ndarray:
+    """Norm clipping (Gupta & Vaidya, 2019): scale each gradient to at most
+    the median norm (or a fixed clip), then average."""
+    norms = jnp.linalg.norm(grads, axis=1)
+    ref = jnp.median(norms) if clip is None else clip
+    factor = jnp.minimum(1.0, ref / jnp.maximum(norms, 1e-12))
+    return (grads * factor[:, None]).mean(axis=0)
+
+
+FILTERS = {
+    "mean": lambda g, f: mean(g),
+    "median": lambda g, f: coordinate_median(g),
+    "trimmed_mean": trimmed_mean,
+    "krum": krum,
+    # >= 2f+1 buckets so corrupted buckets are a strict minority
+    "gmom": lambda g, f: geometric_median_of_means(
+        g, min(g.shape[0], 2 * f + 1) if f else g.shape[0]
+    ),
+    "norm_clip": lambda g, f: norm_clip(g),
+}
+
+
+def filter_tree(grad_trees, name: str, f: int):
+    """Apply a filter leaf-wise over stacked gradient pytrees (leading n)."""
+    fn = FILTERS[name]
+
+    def per_leaf(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1).astype(jnp.float32)
+        return fn(flat, f).reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree.map(per_leaf, grad_trees)

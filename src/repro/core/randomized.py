@@ -1,0 +1,183 @@
+"""Randomized reactive-redundancy protocol state (paper §4.2, §4.3, §5).
+
+Host-side state machine driving the three compiled steps (fast / check /
+identify).  All randomness flows from one seeded generator so a restarted
+run replays the identical check schedule (fault-tolerance requirement:
+checkpoint + restart must be bit-deterministic).
+
+Per iteration t:
+  1. q_t  = fixed q, or the closed-form adaptive q*(f_t, p, λ(ℓ_t)) (§4.3);
+     with ``selective`` reliability scores, per-worker probabilities are
+     reweighted (§5) while preserving the mean check rate.
+  2. with prob q_t  -> check iteration (replication r = f_t+1, detection);
+     on detection   -> reactive identification (r = 2 f_t + 1, vote),
+     identified workers are eliminated (κ grows, f_t shrinks);
+     else           -> fast iteration (plain parallelized SGD).
+
+Almost-sure identification (paper §4.2): a Byzantine worker tampering with
+probability ≥ p stays hidden after t iterations w.p. ≤ (1 - q p)^t → 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import numpy as np
+
+from repro.core import adaptive
+from repro.core.assignment import (
+    Assignment,
+    check_assignment,
+    fast_assignment,
+    identify_assignment,
+)
+from repro.core.efficiency import EfficiencyMeter
+
+Mode = Literal["randomized", "deterministic", "draco", "filter", "none"]
+
+
+@dataclasses.dataclass
+class BFTConfig:
+    n: int                       # workers (data-axis size)
+    f: int                       # Byzantine tolerance target (< n/2)
+    mode: Mode = "randomized"
+    q: float | None = None       # fixed check prob; None -> adaptive (§4.3)
+    p_assumed: float = 0.5       # assumed per-iteration tamper prob (eq. 3)
+    tau: float = 1e-5
+    sketch_k: int = 256
+    selective: bool = False      # reliability-weighted per-worker checks (§5)
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0 <= 2 * self.f < self.n):
+            raise ValueError(f"need 2f < n, got f={self.f}, n={self.n}")
+
+
+@dataclasses.dataclass
+class ProtocolState:
+    cfg: BFTConfig
+    active: np.ndarray            # (n,) bool — not eliminated / not crashed
+    identified: np.ndarray        # (n,) bool — proven Byzantine
+    crashed: np.ndarray           # (n,) bool — failed nodes (elastic path)
+    alpha: np.ndarray             # (n,) float — reliability: fault events + prior
+    beta: np.ndarray              # (n,) float — reliability: clean checks + prior
+    rng: np.random.Generator
+    step: int = 0
+    meter: EfficiencyMeter = dataclasses.field(default_factory=EfficiencyMeter)
+    last_q: float = 0.0
+    last_lambda: float = 0.0
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def create(cls, cfg: BFTConfig) -> "ProtocolState":
+        n = cfg.n
+        return cls(
+            cfg=cfg,
+            active=np.ones(n, bool),
+            identified=np.zeros(n, bool),
+            crashed=np.zeros(n, bool),
+            alpha=np.full(n, 0.5),
+            beta=np.full(n, 0.5),
+            rng=np.random.default_rng(cfg.seed),
+        )
+
+    # -- derived --------------------------------------------------------
+    @property
+    def kappa(self) -> int:
+        """κ_t: Byzantine workers identified so far."""
+        return int(self.identified.sum())
+
+    @property
+    def f_t(self) -> int:
+        """Residual fault budget f - κ_t (never below 0)."""
+        return max(0, self.cfg.f - self.kappa)
+
+    # -- per-iteration decisions -----------------------------------------
+    def check_probability(self, observed_loss: float | None) -> float:
+        cfg = self.cfg
+        if cfg.mode == "none":
+            return 0.0
+        if cfg.mode in ("deterministic", "randomized") and self.f_t == 0:
+            return 0.0  # κ_t = f (or f = 0): nothing left to tolerate
+        if cfg.mode in ("deterministic", "draco"):
+            return 1.0
+        if cfg.q is not None:
+            return float(cfg.q)
+        lam = adaptive.lam_from_loss(observed_loss if observed_loss is not None else 1.0)
+        self.last_lambda = lam
+        return adaptive.q_star(self.f_t, cfg.p_assumed, lam)
+
+    def decide_check(self, observed_loss: float | None = None) -> bool:
+        q = self.check_probability(observed_loss)
+        self.last_q = q
+        if self.cfg.selective and 0.0 < q < 1.0:
+            # §5 selective checks: per-worker probabilities proportional to
+            # the worker's posterior fault rate (Beta mean), normalized so
+            # the TOTAL per-iteration check rate stays ~q (sum q_i = q).
+            # Suspicious workers trigger checks more often; the aggregate
+            # cost (and eq. 2 efficiency) is unchanged.
+            rate = self.alpha / (self.alpha + self.beta)        # (n,)
+            act = self.active
+            total = max(rate[act].sum(), 1e-9)
+            q_i = np.clip(q * rate / total, 0.0, 1.0) * act
+            return bool((self.rng.random(self.cfg.n) < q_i).any())
+        return bool(self.rng.random() < q)
+
+    # -- assignments ------------------------------------------------------
+    # Group membership is permuted by the protocol RNG on every draw —
+    # required for almost-sure identification (every Byzantine worker is
+    # check-eligible infinitely often); seeded + checkpointed => restarts
+    # replay identical assignments.
+    def assignment_fast(self) -> Assignment:
+        return fast_assignment(self.active)
+
+    def assignment_check(self) -> Assignment:
+        return check_assignment(self.active, max(1, self.f_t), self.rng)
+
+    def assignment_identify(self) -> Assignment:
+        return identify_assignment(self.active, max(1, self.f_t), self.rng)
+
+    # -- state updates -----------------------------------------------------
+    def on_clean_check(self, checked_workers: np.ndarray) -> None:
+        self.beta[checked_workers] += 1.0
+
+    def on_identified(self, byz_workers: np.ndarray) -> None:
+        """Eliminate identified Byzantine workers (paper: removed from all
+        subsequent iterations; f_t shrinks via κ)."""
+        self.identified[byz_workers] = True
+        self.active[byz_workers] = False
+        self.alpha[byz_workers] += 1.0
+
+    def on_crash(self, workers: np.ndarray) -> None:
+        """Elastic path: node failure / straggler exclusion — same remap as
+        elimination but without the Byzantine verdict."""
+        self.crashed[workers] = True
+        self.active[workers] = False
+
+    def on_recover(self, workers: np.ndarray) -> None:
+        """Elastic scale-up: recovered (or replacement) nodes rejoin."""
+        self.crashed[workers] = False
+        self.active[workers] = ~self.identified[workers]
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "active": self.active.copy(),
+            "identified": self.identified.copy(),
+            "crashed": self.crashed.copy(),
+            "alpha": self.alpha.copy(),
+            "beta": self.beta.copy(),
+            "rng_state": self.rng.bit_generator.state,
+            "step": self.step,
+            "meter": self.meter.state_dict(),
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self.active = np.asarray(d["active"]).copy()
+        self.identified = np.asarray(d["identified"]).copy()
+        self.crashed = np.asarray(d["crashed"]).copy()
+        self.alpha = np.asarray(d["alpha"]).copy()
+        self.beta = np.asarray(d["beta"]).copy()
+        self.rng.bit_generator.state = d["rng_state"]
+        self.step = int(d["step"])
+        self.meter.load_state_dict(d["meter"])

@@ -1,0 +1,187 @@
+"""Closed-form testbed for the paper's claims: the full master/worker
+protocol on a noiseless least-squares problem (w* known exactly).
+
+Used by tests (exact fault-tolerance assertions) and by the benchmark
+harness (efficiency / convergence / identification-time tables).  Pure
+numpy — no devices needed — so the *protocol* logic (not the SPMD
+plumbing) can be swept over thousands of configurations quickly.  The SPMD
+version of the same protocol is repro.train (validated in
+tests/test_bft_integration.py); both share assignment / detection /
+identification code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import filters as filters_mod
+from repro.core.assignment import (
+    check_assignment,
+    fast_assignment,
+    group_members,
+    identify_assignment,
+    shard_batch_indices,
+)
+from repro.core.randomized import BFTConfig, ProtocolState
+
+Attack = Callable[[np.ndarray], np.ndarray]
+
+ATTACKS: dict[str, Attack] = {
+    "none": lambda g: g,
+    "sign_flip": lambda g: -5.0 * g,
+    "scale": lambda g: 10.0 * g,
+    "noise": lambda g: g + np.random.default_rng(0).normal(size=g.shape),
+    "drift": lambda g: g + 1.0,
+    "zero": lambda g: np.zeros_like(g),
+}
+
+
+def make_problem(n_data=256, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_data, d))
+    w_true = rng.normal(size=d)
+    return A, A @ w_true, w_true
+
+
+def worker_grad(A, y, rows, w):
+    Ar, yr = A[rows], y[rows]
+    return 2 * Ar.T @ (Ar @ w - yr) / len(rows)
+
+
+@dataclasses.dataclass
+class SimResult:
+    w: np.ndarray
+    w_true: np.ndarray
+    state: ProtocolState
+    losses: list
+    q_trace: list
+    identify_step: dict  # worker -> step identified
+
+    @property
+    def final_error(self) -> float:
+        return float(np.linalg.norm(self.w - self.w_true))
+
+    @property
+    def efficiency(self) -> float:
+        return self.state.meter.overall
+
+
+def run_protocol(
+    *,
+    n: int = 8,
+    f: int = 2,
+    byz=(),
+    attack: Attack | str = "sign_flip",
+    p_tamper: float = 0.8,
+    steps: int = 400,
+    q: float | None = 0.4,
+    mode: str = "randomized",
+    filter_name: str = "median",
+    selective: bool = False,
+    lr: float = 0.05,
+    seed: int = 1,
+    problem_seed: int = 0,
+) -> SimResult:
+    if isinstance(attack, str):
+        attack = ATTACKS[attack]
+    A, y, w_true = make_problem(seed=problem_seed)
+    bft_mode = "filter" if mode.startswith("filter") else mode
+    bft = BFTConfig(n=n, f=f, mode=bft_mode, q=q, p_assumed=p_tamper,
+                    selective=selective, seed=seed)
+    st = ProtocolState.create(bft)
+    rng = np.random.default_rng(seed + 1)
+    w = np.zeros(A.shape[1])
+    losses, q_trace = [], []
+    ident_step: dict[int, int] = {}
+
+    def tampered(rows_w, base_w):
+        grads = np.stack(
+            [worker_grad(A, y, rows_w[i], base_w) for i in range(n)]
+        )
+        for b in byz:
+            if st.active[b] and rng.random() < p_tamper:
+                grads[b] = attack(grads[b])
+        return grads
+
+    for t in range(steps):
+        loss = float(np.mean((A @ w - y) ** 2))
+        losses.append(loss)
+        used = computed = 0
+        checked = identified = False
+
+        if mode == "draco":
+            # DRACO (Chen et al. 2018): PROACTIVE 2f+1 correction code in
+            # every iteration — efficiency pinned at 1/(2f+1), no reactive
+            # phase, no elimination (the paper's comparison point).
+            a = identify_assignment(st.active, max(1, f), st.rng)
+            rows = shard_batch_indices(a, len(A))
+            grads = tampered(rows, w)
+            from repro.core.identification import majority_vote
+
+            votes = []
+            for g in group_members(a):
+                val, faulty, _ = majority_vote(np.asarray(grads[g]), tau=1e-9)
+                votes.append(np.asarray(val))
+                for b in np.asarray(g)[np.asarray(faulty)]:
+                    ident_step.setdefault(int(b), t)
+            grad = np.mean(votes, axis=0)
+            used, computed = a.num_shards, a.gradients_computed()
+            checked = True
+        elif mode in ("deterministic", "randomized") and st.decide_check(loss):
+            checked = True
+            a = st.assignment_check()
+            rows = shard_batch_indices(a, len(A))
+            grads = tampered(rows, w)
+            used, computed = a.num_shards, a.gradients_computed()
+            fault = any(
+                np.abs(grads[g] - grads[g[0]]).max() > 1e-9
+                for g in group_members(a)
+            )
+            if fault:
+                identified = True
+                ai = st.assignment_identify()
+                rows_i = shard_batch_indices(ai, len(A))
+                grads_i = tampered(rows_i, w)
+                used += ai.num_shards
+                computed += ai.gradients_computed()
+                from repro.core.identification import majority_vote
+
+                votes, newly = [], set()
+                for g in group_members(ai):
+                    val, faulty, ok = majority_vote(
+                        np.asarray(grads_i[g]), tau=1e-9
+                    )
+                    votes.append(np.asarray(val))
+                    newly |= {int(x) for x in np.asarray(g)[np.asarray(faulty)]}
+                if newly:
+                    st.on_identified(np.asarray(sorted(newly)))
+                    for b in newly:
+                        ident_step[b] = t
+                grad = np.mean(votes, axis=0)
+            else:
+                st.on_clean_check(np.flatnonzero(a.group_of_worker >= 0))
+                grad = np.tensordot(a.weight, grads, axes=1)
+        else:
+            a = st.assignment_fast()
+            rows = shard_batch_indices(a, len(A))
+            grads = tampered(rows, w)
+            used, computed = a.num_shards, a.gradients_computed()
+            if mode.startswith("filter"):
+                name = mode.split(":", 1)[1] if ":" in mode else filter_name
+                import jax.numpy as jnp
+
+                grad = np.asarray(
+                    filters_mod.FILTERS[name](
+                        jnp.asarray(grads[st.active]), max(1, f)
+                    )
+                )
+            else:
+                grad = np.tensordot(a.weight, grads, axes=1)
+
+        st.meter.record(used, computed, checked=checked, identified=identified)
+        q_trace.append(st.last_q)
+        w = w - lr * grad
+        st.step += 1
+    return SimResult(w, w_true, st, losses, q_trace, ident_step)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (  # noqa: F401
+    global_batch_for_step,
+    worker_batches,
+)

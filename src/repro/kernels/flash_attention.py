@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: fused blockwise (flash) attention forward, GQA-aware.
+
+Grid (B, H, n_qblocks, n_kblocks), k-minor so the online-softmax state
+(m, l, acc) persists in VMEM scratch across the k sweep of each q block.
+Tiles: q (bq, hd), k/v (bk, hd) — with bq = bk = 512 and hd = 128 the
+working set is ~1.3 MiB << 16 MiB VMEM, and every matmul dim is a multiple
+of 128 (MXU-aligned).  GQA is handled by the k/v BlockSpec index maps
+(query head h reads kv head h // G) — kv tensors are never expanded.
+
+Causal / sliding-window masks are applied in-kernel; fully-masked k blocks
+are skipped via pl.when (on real TPU the HBM fetch still happens — grid
+pruning by q-block-dependent k ranges is the documented follow-up; the
+XLA-level blockwise implementation in repro.models.attention already
+realizes exact trip counts and is what the dry-run lowers).
+
+Validated in interpret mode against ref.mha_ref over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, offs: int, sk_valid: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = qi * bq
+    k0 = ki * bk
+    # block-level reachability (skip fully-masked blocks)
+    needed = k0 < sk_valid
+    if causal:
+        needed &= k0 <= q0 + (bq - 1) + offs
+    if window is not None:
+        needed &= (k0 + bk - 1) > q0 + offs - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (bq, bk)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        keep = kpos < sk_valid
+        if causal:
+            keep &= kpos <= qpos + offs
+        if window is not None:
+            keep &= kpos > qpos + offs - window
+        s = jnp.where(keep, s, NEG_INF)
+        m_prev = m_ref[...]                                # (bq, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, interpret: bool = False):
+    """q (B,Sq,H,hd); k/v (B,Sk,K,hd) with K | H.  Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd) if scale is None else scale
+    bq = min(bq, max(8, Sq))
+    bk = min(bk, max(8, Sk))
+
+    qt = q.transpose(0, 2, 1, 3)                           # (B,H,Sq,hd)
+    kt = k.transpose(0, 2, 1, 3)                           # (B,K,Sk,hd)
+    vt = v.transpose(0, 2, 1, 3)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq_p, sk_p = Sq + pad_q, Sk + pad_k
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            bq=bq, bk=bk, offs=Sk - Sq, sk_valid=Sk,
+        ),
+        grid=(B, H, sq_p // bq, sk_p // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :Sq].transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: blockwise pairwise replica agreement (reactive
+identification, paper §4.1).
+
+The reference (identification.pairwise_agreement) materializes the
+(R, R, d) comparison tensor — impossible for production gradient shards.
+This kernel streams the replica matrix (R, d) through VMEM in (R, BLOCK_D)
+tiles and reduces the *relative* max difference
+
+    rel[i, j] = max_t |g_i[t] - g_j[t]| / (1 + min(|g_i[t]|, |g_j[t]|))
+
+into an (R, R) accumulator (output VMEM block, revisited every step).  The
+(R, R, BLOCK_D) broadcast lives only in registers/VMEM for one tile.
+R <= 2f+1 is small (<= ~17), so the tile footprint is R * BLOCK_D * 4 bytes
+* (R+2) ~ a few hundred KiB << VMEM.
+
+The majority decision itself (counts, winner, faulty mask) is O(R^2) scalar
+work done by the jnp epilogue in ops.vote.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _agree_kernel(reps_ref, o_ref):
+    i = pl.program_id(0)
+    x = reps_ref[...].astype(jnp.float32)                  # (R, BD)
+    a = x[:, None, :]                                      # (R, 1, BD)
+    b = x[None, :, :]                                      # (1, R, BD)
+    rel = jnp.abs(a - b) / (1.0 + jnp.minimum(jnp.abs(a), jnp.abs(b)))
+    partial = rel.max(axis=-1)                             # (R, R)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = jnp.maximum(o_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_relmax(replicas: jnp.ndarray, block_d: int = BLOCK_D,
+                    interpret: bool = False) -> jnp.ndarray:
+    """replicas (R, d) -> (R, R) f32 relative max-difference matrix."""
+    R, d = replicas.shape
+    pad = (-d) % block_d
+    reps = jnp.pad(replicas, ((0, 0), (0, pad)))  # zero-pad: rel diff 0
+    nsteps = reps.shape[1] // block_d
+    return pl.pallas_call(
+        _agree_kernel,
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((R, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((R, R), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, R), jnp.float32),
+        interpret=interpret,
+    )(reps)

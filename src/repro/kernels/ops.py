@@ -1,0 +1,63 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) every entry point takes ``interpret=True``; on TPU
+the same call sites compile to Mosaic.  ``INTERPRET`` defaults to True when
+no TPU is present so library code can call these unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import coded_encode as _enc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import majority_vote as _mv
+from repro.kernels import sketch as _sk
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def sketch(flat_g, key_scalar, k: int = 256, interpret: bool | None = None):
+    return _sk.sketch(
+        flat_g, key_scalar, k=k,
+        interpret=INTERPRET if interpret is None else interpret,
+    )
+
+
+def pairwise_relmax(replicas, interpret: bool | None = None):
+    return _mv.pairwise_relmax(
+        replicas, interpret=INTERPRET if interpret is None else interpret
+    )
+
+
+def vote(replicas, tau: float = 1e-5, interpret: bool | None = None):
+    """Kernel-backed majority vote: (value, faulty, has_majority).
+
+    Same contract as repro.core.identification.majority_vote, but the
+    pairwise comparison streams through the Pallas kernel (no (R,R,d)
+    materialization)."""
+    R = replicas.shape[0]
+    rel = pairwise_relmax(replicas.astype(jnp.float32), interpret=interpret)
+    agree = rel <= tau
+    counts = agree.sum(axis=1)
+    is_major = counts > (R // 2)
+    has_majority = is_major.any()
+    winner = jnp.argmax(is_major)
+    value = replicas[winner]
+    faulty = ~agree[winner] & has_majority
+    return value, faulty, has_majority
+
+
+def coded_encode(coeffs, grads, interpret: bool | None = None):
+    return _enc.coded_encode(
+        coeffs, grads, interpret=INTERPRET if interpret is None else interpret
+    )
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale, bq=bq, bk=bk,
+        interpret=INTERPRET if interpret is None else interpret,
+    )

@@ -1,0 +1,335 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before ANY other import (jax locks
+the device count on first init).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED, SHAPES, get_config, layer_groups, layer_kinds
+from repro.configs.base import shape_applicable
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_pod_worker_mesh, make_production_mesh
+from repro.launch.specs import input_specs
+from repro.optim import OptConfig
+from repro.train.pjit_step import make_decode_step, make_prefill_step, make_train_step
+
+UNROLL_THRESHOLD = 8  # <= this many total layers: cost via full unroll
+
+
+def _flatten_args(specs: dict, kind: str):
+    if kind == "train":
+        return (specs["params"], specs["opt_state"], specs["batch"], specs["step"])
+    if kind == "prefill":
+        return (specs["params"], specs["batch"])
+    return (specs["params"], specs["token"], specs["pos"], specs["cache"])
+
+
+def _step_for(cfg, kind: str, opt: OptConfig):
+    if kind == "train":
+        return make_train_step(cfg, opt)
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_decode_step(cfg)
+
+
+def lower_compile(cfg, shape, mesh, opt, *, want_text: bool = True):
+    """Lower+compile one step; return (analysis dict, hlo text)."""
+    specs = input_specs(cfg, shape, mesh, opt)
+    step = _step_for(cfg, shape.kind, opt)
+    # donation mirrors production steps: train donates params+opt state,
+    # decode donates the KV/SSM cache (in-place update, no copy)
+    donate = {"train": (0, 1), "prefill": (), "decode": (3,)}[shape.kind]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(step, donate_argnums=donate).lower(
+            *_flatten_args(specs, shape.kind)
+        )
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis())
+    txt = compiled.as_text() if want_text else ""
+    coll = RL.collective_bytes(txt) if want_text else {"total": 0.0}
+    return {
+        "compile_s": dt,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total"],
+        "collective_detail": {
+            k: v for k, v in coll.items() if k not in ("total", "counts")
+        },
+        "collective_counts": coll.get("counts", {}),
+        "arg_bytes": mem.argument_size_in_bytes,
+        "out_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "peak_bytes": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+    }
+
+
+def cost_by_decomposition(cfg, shape, mesh, opt) -> dict:
+    """Exact per-step cost for scanned stacks (DESIGN.md roofline method).
+
+    cost(model) = cost(stem) + sum_g repeats_g * (cost(pattern_g) - stem).
+    Each component model is compiled UNROLLED so cost_analysis sees every
+    layer.  Falls back to a full unrolled compile for small stacks.
+    """
+    total_layers = cfg.num_layers + cfg.encoder_layers
+    if total_layers <= UNROLL_THRESHOLD:
+        c = lower_compile(
+            dataclasses.replace(cfg, unroll_layers=True), shape, mesh, opt
+        )
+        c["method"] = "full_unroll"
+        return c
+
+    groups = layer_groups(cfg)
+    # validate prefix-reproducibility of each group's pattern
+    for g in groups:
+        pref = layer_kinds(cfg, len(g.pattern))
+        if tuple(pref) != g.pattern:
+            c = lower_compile(
+                dataclasses.replace(cfg, unroll_layers=True), shape, mesh, opt
+            )
+            c["method"] = "full_unroll_fallback"
+            return c
+
+    stem_cfg = dataclasses.replace(
+        cfg, num_layers=0, encoder_layers=0, unroll_layers=True
+    )
+    stem = lower_compile(stem_cfg, shape, mesh, opt)
+    out = {k: stem[k] for k in ("flops", "bytes", "collective_bytes")}
+    parts = {"stem": stem}
+    for gi, g in enumerate(groups):
+        gcfg = dataclasses.replace(
+            cfg, num_layers=len(g.pattern), encoder_layers=0,
+            unroll_layers=True,
+        )
+        gc = lower_compile(gcfg, shape, mesh, opt)
+        parts[f"group{gi}"] = gc
+        for k in ("flops", "bytes", "collective_bytes"):
+            out[k] += g.repeats * max(0.0, gc[k] - stem[k])
+    if cfg.encoder_layers:
+        ecfg = dataclasses.replace(
+            cfg, num_layers=0, encoder_layers=1, unroll_layers=True
+        )
+        ec = lower_compile(ecfg, shape, mesh, opt)
+        for k in ("flops", "bytes", "collective_bytes"):
+            out[k] += cfg.encoder_layers * max(0.0, ec[k] - stem[k])
+    out["method"] = "period_decomposition"
+    out["parts_compile_s"] = {k: v["compile_s"] for k, v in parts.items()}
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, opt: OptConfig,
+             with_cost: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    res: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+    }
+    # 1) full compile (scan) — THE dry-run proof + memory fit
+    full = lower_compile(cfg, shape, mesh, opt)
+    res["full"] = full
+    res["fits_hbm"] = full["peak_bytes"] <= RL.HBM_PER_CHIP
+    # 2) exact cost (single-pod roofline table only)
+    if with_cost and not multi_pod:
+        if shape.kind == "decode":
+            cost = dict(full)
+            cost["method"] = "direct_unrolled_decode"
+        else:
+            cost = cost_by_decomposition(cfg, shape, mesh, opt)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        mf = RL.model_flops(cfg, tokens=tokens, training=(shape.kind == "train"))
+        rl = RL.Roofline(
+            flops_per_device=cost["flops"],
+            bytes_per_device=cost["bytes"],
+            collective_bytes_per_device=cost["collective_bytes"],
+            model_flops_total=mf,
+            chips=chips,
+        )
+        res["cost_method"] = cost["method"]
+        res["roofline"] = rl.as_dict()
+        res["collective_detail"] = full.get("collective_detail", {})
+    return res
+
+
+def run_bft_cells(arch: str, *, multi_pod: bool, f: int = 3) -> dict:
+    """Dry-run the BFT-instrumented shard_map steps (fast/check/identify)
+    on the production mesh — proves the paper's protocol itself shards."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.assignment import check_assignment, fast_assignment, \
+        group_members, identify_assignment
+    from repro.models import model as M
+    from repro.optim import abstract_opt_state
+    from repro.sharding import PARAM_RULES, tree_structs
+    from repro.train.steps import (
+        AttackConfig, StepConfig, make_check_step, make_fast_step,
+        make_identify_step,
+    )
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    waxes = ("pod", "data") if multi_pod else ("data",)
+    n = int(np.prod([mesh.shape[a] for a in waxes]))
+    sc = StepConfig(worker_axes=waxes, detection="sketch")
+    attack = AttackConfig(kind="sign_flip")
+    opt = OptConfig()
+    rules = dict(PARAM_RULES)
+    rules["embed"] = None  # params replicated over worker axes (TP only)
+
+    shape = SHAPES["train_4k"]
+    B, S = shape.global_batch, shape.seq_len
+    params = tree_structs(M.abstract_params(cfg), mesh, rules)
+    opt_state = tree_structs(
+        abstract_opt_state(opt, M.abstract_params(cfg)), mesh, rules
+    )
+    active = np.ones(n, bool)
+    out = {"arch": arch, "mesh": "2x16x16" if multi_pod else "16x16", "n": n}
+
+    wspec = P(waxes if len(waxes) > 1 else waxes[0])
+
+    def wbatch(a):
+        rows = B // a.num_shards
+        sh = NamedSharding(mesh, P(wspec[0], None, None))
+        return {
+            "tokens": jax.ShapeDtypeStruct((n, rows, S), np.int32, sharding=sh),
+            "labels": jax.ShapeDtypeStruct((n, rows, S), np.int32, sharding=sh),
+        }
+
+    vec = jax.ShapeDtypeStruct((n,), np.float32,
+                               sharding=NamedSharding(mesh, wspec))
+    bmask = jax.ShapeDtypeStruct((n,), np.bool_,
+                                 sharding=NamedSharding(mesh, wspec))
+    gids = jax.ShapeDtypeStruct((n,), np.int32,
+                                sharding=NamedSharding(mesh, wspec))
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    step = jax.ShapeDtypeStruct((), np.int32)
+
+    with jax.set_mesh(mesh):
+        for mode in ("fast", "check", "check_full", "identify"):
+            t0 = time.time()
+            if mode == "fast":
+                a = fast_assignment(active)
+                fn = make_fast_step(cfg, opt, mesh, sc, attack)
+                args = (params, opt_state, wbatch(a), vec, bmask, key, step)
+            elif mode.startswith("check"):
+                # sketch (beyond-paper) vs full (paper-faithful) detection
+                sc_m = (
+                    sc if mode == "check"
+                    else dataclasses.replace(sc, detection="full")
+                )
+                a = check_assignment(active, f)
+                fn = make_check_step(cfg, opt, mesh, sc_m, attack, a.num_shards)
+                args = (params, opt_state, wbatch(a), vec, bmask, gids, key, step)
+            else:
+                a = identify_assignment(active, f)
+                fn = make_identify_step(
+                    cfg, opt, mesh, sc, attack, np.stack(group_members(a))
+                )
+                args = (params, opt_state, wbatch(a), vec, bmask, key, step)
+            lowered = jax.jit(fn).lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = dict(compiled.cost_analysis())
+            coll = RL.collective_bytes(compiled.as_text())
+            out[mode] = {
+                "compile_s": time.time() - t0,
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "collective_bytes": coll["total"],
+                "collective_counts": coll["counts"],
+                "peak_bytes": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+                "replication": a.replication,
+                "num_shards": a.num_shards,
+            }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--bft", action="store_true",
+                    help="dry-run the BFT shard_map steps instead")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    opt = OptConfig()
+
+    if args.bft:
+        for arch in archs:
+            for mp in meshes:
+                tag = f"bft_{arch}_{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {tag}")
+                    continue
+                try:
+                    res = run_bft_cells(arch, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001
+                    res = {"arch": arch, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[FAIL] {tag}: {e}")
+                with open(path, "w") as fh:
+                    json.dump(res, fh, indent=1)
+                print(f"[done] {tag}")
+        return
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape_name}_{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {tag}")
+                    continue
+                t0 = time.time()
+                try:
+                    res = run_cell(
+                        arch, shape_name, multi_pod=mp, opt=opt,
+                        with_cost=not args.no_cost,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if mp else "single",
+                           "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[FAIL] {tag}: {e}")
+                with open(path, "w") as fh:
+                    json.dump(res, fh, indent=1)
+                status = res.get("skipped") or res.get("error") or (
+                    f"fits={res.get('fits_hbm')} "
+                    f"dom={res.get('roofline', {}).get('dominant', '-')}"
+                )
+                print(f"[done] {tag} ({time.time()-t0:.0f}s) {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

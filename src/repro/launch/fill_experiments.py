@@ -1,0 +1,48 @@
+"""Fill EXPERIMENTS.md marker comments with generated tables.
+
+    PYTHONPATH=src python -m repro.launch.fill_experiments
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import re
+from contextlib import redirect_stdout
+
+from repro.launch.report import bft_table, dryrun_table, load, roofline_table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--file", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    bft = [c for c in cells if "fast" in c]
+    reg = [c for c in cells if "fast" not in c]
+
+    text = open(args.file).read()
+
+    def fill(marker: str, content: str, text: str) -> str:
+        pat = re.compile(
+            rf"<!-- {marker} -->.*?(?=<!-- {marker}_END -->|\n## |\n### |\Z)",
+            re.S,
+        )
+        repl = f"<!-- {marker} -->\n\n{content}\n\n"
+        if pat.search(text):
+            return pat.sub(lambda _: repl, text, count=1)
+        return text
+
+    text = fill("DRYRUN_TABLE", dryrun_table(reg), text)
+    text = fill("ROOFLINE_TABLE", roofline_table(reg), text)
+    if bft:
+        text = fill("BFT_TABLE", bft_table(bft), text)
+    open(args.file, "w").write(text)
+    n_ok = sum(1 for c in reg if "full" in c)
+    n_skip = sum(1 for c in reg if "skipped" in c)
+    n_err = sum(1 for c in reg if "error" in c)
+    print(f"filled: {n_ok} cells, {n_skip} skips, {n_err} errors, {len(bft)} bft")
+
+
+if __name__ == "__main__":
+    main()

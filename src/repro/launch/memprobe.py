@@ -1,0 +1,48 @@
+"""Quantify the XLA-CPU bf16-emulation memory tax (EXPERIMENTS.md caveat).
+
+Compiles the same 1-layer train step with dtype=bfloat16 vs float32 on the
+production mesh and compares temp bytes: on a real TPU bf16 temps would be
+~half the f32 temps; on the CPU backend bf16 is emulated THROUGH f32 with
+inserted converts, so bf16 temps come out >= f32 temps.  The measured
+ratio calibrates the `N*` memory-fit annotations.
+
+    PYTHONPATH=src python -m repro.launch.memprobe --arch llama3.2-1b
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import lower_compile
+from repro.launch.mesh import make_production_mesh
+from repro.optim import OptConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    cfg0 = get_config(args.arch)
+    mesh = make_production_mesh()
+    opt = OptConfig()
+    shape = SHAPES[args.shape]
+    rows = {}
+    for dt in ("bfloat16", "float32"):
+        cfg = dataclasses.replace(cfg0, num_layers=1, encoder_layers=0,
+                                  dtype=dt, unroll_layers=True)
+        r = lower_compile(cfg, shape, mesh, opt, want_text=False)
+        rows[dt] = r
+        print(f"{dt:9s} arg={r['arg_bytes']/2**30:.2f}GiB "
+              f"temp={r['temp_bytes']/2**30:.2f}GiB")
+    ratio = rows["bfloat16"]["temp_bytes"] / max(1, rows["float32"]["temp_bytes"])
+    print(f"bf16/f32 temp ratio on CPU backend: {ratio:.2f} "
+          f"(TPU expectation ~0.5; anything >=1 is emulation tax)")
+
+
+if __name__ == "__main__":
+    main()

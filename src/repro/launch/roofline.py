@@ -1,0 +1,221 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Terms per (arch x shape x mesh), all in seconds PER DEVICE per step:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / ICI_BW
+
+HLO FLOPs / bytes come from ``compiled.cost_analysis()`` (per-device, after
+SPMD partitioning — verified empirically).  cost_analysis counts a
+``lax.scan`` body ONCE, so scanned models are accounted exactly via the
+*period decomposition*: cost(model) = cost(stem) + sum_g repeats_g *
+(cost(one-pattern model_g) - cost(stem)), each term compiled unrolled
+(launch/dryrun.py).  Collective bytes are parsed from the optimized HLO
+(``compiled.as_text()``) with per-op ring-transfer multipliers.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link per chip
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(shape_text: str) -> int:
+    """Sum byte sizes of the HLO result shape(s) in ``shape_text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved over ICI, by collective kind.
+
+    Ring-algorithm accounting (bytes each chip puts on the wire):
+      all-gather      result * (g-1)/g     (result = gathered size)
+      reduce-scatter  result * (g-1)      (result = scattered shard; each
+                                           chip forwards g-1 shard-sized
+                                           partials)
+      all-reduce      result * 2(g-1)/g    (RS + AG phases at full size)
+      all-to-all      result * (g-1)/g
+      collective-permute  result
+    """
+    out = {k: 0.0 for k in (
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute",
+    )}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = _result_bytes(m.group(1))
+        g = max(2, _group_size(line))
+        if kind == "all-gather":
+            moved = nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = nbytes * (g - 1)
+        elif kind == "all-reduce":
+            moved = nbytes * 2 * (g - 1) / g
+        elif kind == "all-to-all":
+            moved = nbytes * (g - 1) / g
+        else:  # collective-permute
+            moved = nbytes
+        out[kind] += moved
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_total: float = 0.0     # 6*N*D (dense) / 6*N_active*D (MoE)
+    chips: int = 256
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (total across chips)."""
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        max-term's speed: compute_s / bound_s (1.0 = compute-bound)."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE)
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg) -> int:
+    """Active parameters per token (MoE counts top_k of num_experts +
+    shared expert; embeddings counted once)."""
+    from repro.configs.base import layer_kinds
+    from repro.models import model as M
+    from repro.sharding import Annotated
+    import jax
+    import numpy as np
+
+    total = 0
+    abstract = M.abstract_params(cfg)
+
+    def leaf_count(tree):
+        return sum(
+            int(np.prod(a.shape))
+            for a in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Annotated))
+        )
+
+    # embed + final norm (+ encoder)
+    total += leaf_count(abstract["embed"]) + leaf_count(abstract["final_norm"])
+    if "encoder" in abstract:
+        total += leaf_count(abstract["encoder"]) + leaf_count(abstract["encoder_norm"])
+    # decoder: walk stacked groups, de-stack, apply MoE activation factor
+    from repro.configs.base import layer_groups
+
+    groups = layer_groups(cfg)
+    for g, gp in zip(groups, abstract["decoder"]):
+        for pos, kind in enumerate(g.pattern):
+            tree = gp[pos]
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                tree, is_leaf=lambda x: isinstance(x, Annotated)
+            )[0]:
+                n = int(np.prod(leaf.shape[1:]))  # drop stacked `repeats` dim
+                keys = [str(getattr(p, "key", "")) for p in path]
+                if kind.ffn == "moe" and any(k in ("gate", "up", "down") for k in keys) \
+                        and "shared" not in keys and "ffn" in keys:
+                    m = cfg.moe
+                    n = n * m.top_k // m.num_experts
+                total += n * g.repeats
+    return total
+
+
+def model_flops(cfg, *, tokens: int, training: bool) -> float:
+    n_active = active_param_count(cfg)
+    return (6.0 if training else 2.0) * n_active * tokens

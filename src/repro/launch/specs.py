@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run; no allocation).
+
+``input_specs(cfg, shape, mesh)`` returns the kwargs for the step being
+lowered for that (arch x shape) cell:
+
+  train_*    -> {params, opt_state, batch{tokens, labels[, ctx]}, step}
+  prefill_*  -> {params, batch{tokens[, ctx]}}
+  decode_*   -> {params, token, pos, cache}
+
+All leaves carry NamedShardings resolved from the logical-axis rules
+(divisibility fallback included), weak-type-correct, shardable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import OptConfig, abstract_opt_state
+from repro.sharding import (
+    ACT_RULES,
+    PARAM_RULES,
+    spec_for,
+    tree_structs,
+)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, *, global_batch: int,
+                seq_len: int, labels: bool = True) -> dict:
+    bspec = spec_for(("batch", "seq"), mesh, (global_batch, seq_len), ACT_RULES)
+    out = {
+        "tokens": jax.ShapeDtypeStruct(
+            (global_batch, seq_len), jnp.int32,
+            sharding=NamedSharding(mesh, bspec),
+        )
+    }
+    if labels:
+        out["labels"] = jax.ShapeDtypeStruct(
+            (global_batch, seq_len), jnp.int32,
+            sharding=NamedSharding(mesh, bspec),
+        )
+    if cfg.family in ("vlm", "audio"):
+        tctx = (
+            cfg.num_encoder_positions
+            if cfg.is_encoder_decoder
+            else cfg.num_vision_tokens
+        )
+        cspec = spec_for(
+            ("batch", "seq", "embed"), mesh, (global_batch, tctx, cfg.d_model),
+            ACT_RULES,
+        )
+        out["ctx"] = jax.ShapeDtypeStruct(
+            (global_batch, tctx, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, cspec),
+        )
+    return out
+
+
+def param_structs(cfg: ModelConfig, mesh: Mesh, rules=None):
+    return tree_structs(M.abstract_params(cfg), mesh, rules or PARAM_RULES)
+
+
+def opt_structs(cfg: ModelConfig, opt: OptConfig, mesh: Mesh, rules=None):
+    return tree_structs(
+        abstract_opt_state(opt, M.abstract_params(cfg)), mesh,
+        rules or PARAM_RULES,
+    )
+
+
+def cache_structs(cfg: ModelConfig, mesh: Mesh, *, batch: int, seq_len: int,
+                  long_context: bool = False):
+    # caches are ACTIVATION state: batch over (pod, data), kv over model,
+    # seq over data for long-context decode (SP) — not param rules.
+    return tree_structs(
+        M.abstract_cache(cfg, batch, seq_len, long_context=long_context),
+        mesh, ACT_RULES,
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                opt: OptConfig | None = None) -> dict:
+    """Full kwargs tree for the step lowered by this cell."""
+    if shape.kind == "train":
+        opt = opt or OptConfig()
+        return {
+            "params": param_structs(cfg, mesh),
+            "opt_state": opt_structs(cfg, opt, mesh),
+            "batch": batch_specs(
+                cfg, mesh, global_batch=shape.global_batch,
+                seq_len=shape.seq_len,
+            ),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_structs(cfg, mesh),
+            "batch": batch_specs(
+                cfg, mesh, global_batch=shape.global_batch,
+                seq_len=shape.seq_len, labels=False,
+            ),
+        }
+    # decode: one new token against a seq_len cache
+    long = shape.seq_len >= 262144
+    tok_spec = spec_for(("batch",), mesh, (shape.global_batch,), ACT_RULES)
+    return {
+        "params": param_structs(cfg, mesh),
+        "token": jax.ShapeDtypeStruct(
+            (shape.global_batch,), jnp.int32,
+            sharding=NamedSharding(mesh, tok_spec),
+        ),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache_structs(
+            cfg, mesh, batch=shape.global_batch, seq_len=shape.seq_len,
+            long_context=long,
+        ),
+    }

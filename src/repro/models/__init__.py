@@ -1,0 +1,10 @@
+from repro.models import attention, layers, model, moe, ssm, transformer  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init,
+    prefill,
+    train_loss,
+)

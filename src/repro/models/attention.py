@@ -1,0 +1,300 @@
+"""Attention: GQA with optional qk-norm, sliding-window (local) masks,
+cross-attention, prefill and single-token decode with a KV cache.
+
+Full-sequence attention is computed *blockwise with an online softmax*
+(flash-attention schedule in pure JAX):
+
+  * memory stays O(S * block) — a 32k-token prefill never materializes the
+    S x S logits, which matters both on real HBM and for the dry-run's
+    ``memory_analysis``;
+  * causal work is exact — query blocks are unrolled (static python loop) so
+    each block's kv-scan has its *exact* trip count, and the compiled HLO
+    FLOPs show S^2/2, not a masked S^2.  The same applies to sliding-window
+    layers, which only visit kv blocks inside the window (O(S*W) FLOPs);
+  * this function is also the numerical oracle for the Pallas flash kernel
+    (kernels/flash_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, l2norm
+from repro.sharding import Annotated
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def abstract_attention(cfg, cross: bool = False):
+    dt = _dt(cfg)
+    H, K, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": Annotated((D, H * hd), ("embed", "heads"), dt),
+        "wk": Annotated((D, K * hd), ("embed", "kv"), dt),
+        "wv": Annotated((D, K * hd), ("embed", "kv"), dt),
+        "wo": Annotated((H * hd, D), ("heads", "embed"), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = Annotated((hd,), ("norm",), dt, init="ones")
+        p["k_norm"] = Annotated((hd,), ("norm",), dt, init="ones")
+    if cross:
+        # cross-attention layers carry gating (llama-3.2-vision style)
+        p["gate_attn"] = Annotated((), (), dt, init="zeros")
+    return p
+
+
+def project_q(params, x, cfg, positions=None, rope: bool = True):
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, H, hd)
+    if cfg.qk_norm:
+        q = l2norm(q) * params["q_norm"].astype(q.dtype)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(params, x, cfg, positions=None, rope: bool = True):
+    B, S, _ = x.shape
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        k = l2norm(k) * params["k_norm"].astype(k.dtype)
+    if rope and positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def output_proj(params, o):
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, -1)
+    if o.shape[-1] == params["wo"].shape[0]:
+        # align the merged H*hd dim with wo's 'heads' sharding BEFORE the
+        # contraction: without this, padded-head-sharded o gets fully
+        # re-gathered to meet the weight layout (§Perf iteration 2)
+        from repro.sharding import constrain_here
+
+        o = constrain_here(o, ("batch", None, "heads"))
+    return jnp.einsum("bsh,hd->bsd", o, params["wo"])
+
+
+def shard_heads_for_tp(q, k, v):
+    """Pin attention activations to head-sharded layout over `model` TP.
+
+    Architectures whose head count doesn't divide the TP width (starcoder2:
+    36H, whisper: 6H on model=16) otherwise make GSPMD re-gather the full
+    (B, S, H*hd) activations around every reshape — tens of GB per layer at
+    32k tokens.  Padded sharding ("heads_forced") wastes the padded head
+    slots' compute (<= ceil(H/tp)*tp/H ~ 1.33x on the attention term) but
+    eliminates the gathers.  KV heads are expanded to H when K % tp != 0 so
+    the grouped einsum never carries a non-divisible dim (the expansion is
+    itself head-sharded: ~MBs per device).  See EXPERIMENTS.md §Perf iter 1.
+    """
+    from repro.sharding import constrain_here, mesh_axis_size_here
+
+    tp = mesh_axis_size_here("model")
+    if tp <= 1:
+        return q, k, v
+    H, K = q.shape[2], k.shape[2]
+    if K % tp != 0 and K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    head_axis = "heads" if H % tp == 0 else "heads_forced"
+    q = constrain_here(q, ("batch", None, head_axis, None))
+    k = constrain_here(k, ("batch", None, head_axis, None))
+    v = constrain_here(v, ("batch", None, head_axis, None))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# blockwise online-softmax attention
+# ---------------------------------------------------------------------------
+
+def _block_attend(q, k, v, *, scale, mask_fn=None, q0=0, k0=0):
+    """One (q-block, kv-block) tile.  q: (B,S,H,hd) grouped-GQA inside."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    # logits: (B, K, G, Sq, Sk) in f32
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask_fn is not None:
+        Sk = k.shape[1]
+        qpos = q0 + jnp.arange(Sq)
+        kpos = k0 + jnp.arange(Sk)
+        m = mask_fn(qpos[:, None], kpos[None, :])  # (Sq, Sk) bool, True=keep
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+    return logits, v
+
+
+def blockwise_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    scale: float | None = None,
+    unroll: bool = False,
+):
+    """Flash-style attention.  q: (B,Sq,H,hd), k/v: (B,Sk,K,hd) with K|H.
+
+    Query blocks are a static python loop (exact causal/window trip counts);
+    kv blocks inside each query block are a lax.scan carrying the online
+    softmax state (m, l, acc).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    scale = (1.0 / math.sqrt(hd)) if scale is None else scale
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    nq = -(-Sq // q_block)
+
+    def mask_fn(qpos, kpos):
+        keep = kpos < Sk  # padded tail keys are masked out
+        if causal:
+            # offset: query i attends keys <= i + (Sk - Sq) (prefill alignment)
+            keep &= kpos <= (qpos + (Sk - Sq))
+        if window is not None:
+            keep &= kpos > (qpos + (Sk - Sq) - window)
+        return keep
+
+    # pad keys/values to a kv_block multiple; mask_fn hides the padded tail
+    if Sk % kv_block != 0:
+        pad = kv_block - (Sk % kv_block)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    outs = []
+    for qi in range(nq):
+        q0 = qi * q_block
+        qs = min(q_block, Sq - q0)
+        qblk = jax.lax.dynamic_slice_in_dim(q, q0, qs, axis=1)
+        # kv block range actually needed by this query block
+        hi_pos = q0 + qs - 1 + (Sk - Sq) if causal else Sk - 1
+        hi_pos = min(max(hi_pos, 0), Sk - 1)
+        lo_pos = 0
+        if window is not None:
+            lo_pos = max(0, q0 + (Sk - Sq) - window + 1)
+        kb_lo, kb_hi = lo_pos // kv_block, hi_pos // kv_block
+        nkb = kb_hi - kb_lo + 1
+
+        m0 = jnp.full((B, K, G, qs), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qs), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qs, hd), jnp.float32)
+
+        def body(carry, ki):
+            m, l, acc = carry
+            k0_ = (kb_lo + ki) * kv_block
+            kblk = jax.lax.dynamic_slice_in_dim(k, k0_, kv_block, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, k0_, kv_block, axis=1)
+            logits, vv = _block_attend(
+                qblk, kblk, vblk, scale=scale, mask_fn=mask_fn, q0=q0, k0=k0_
+            )
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vv.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        if nkb == 1:
+            (m, l, acc), _ = body((m0, l0, a0), 0)
+        elif unroll:
+            # cost-accounting mode: every kv block visible to cost_analysis
+            carry = (m0, l0, a0)
+            for ki in range(nkb):
+                carry, _ = body(carry, ki)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0), jnp.arange(nkb), length=nkb
+            )
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        o = o.reshape(B, K * G, qs, hd).transpose(0, 2, 1, 3)  # (B,qs,H,hd)
+        outs.append(o.astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q1, cache_k, cache_v, *, valid_len, window: int | None = None,
+                     scale: float | None = None):
+    """Single-token attention against a KV cache.
+
+    q1: (B,1,H,hd); cache_k/v: (B,S,K,hd) with the new token's k/v already
+    written at position ``valid_len - 1``.  Positions >= valid_len are
+    masked; sliding-window layers additionally mask positions older than
+    ``window``.  Decode logits are only (B,H,S) so they are materialized
+    directly (no blockwise pass needed).
+    """
+    B, _, H, hd = q1.shape
+    S = cache_k.shape[1]
+    K = cache_k.shape[2]
+    G = H // K
+    scale = (1.0 / math.sqrt(hd)) if scale is None else scale
+    qg = q1.reshape(B, K, G, hd)
+    # mixed-precision einsums with f32 accumulation via
+    # preferred_element_type — never materialize an f32 copy of the cache
+    # (at 32k x 128 batch that copy would be GBs per layer of pure temps)
+    logits = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, cache_k, preferred_element_type=jnp.float32
+    ) * scale
+    kpos = jnp.arange(S)
+    keep = kpos < valid_len
+    if window is not None:
+        keep &= kpos > (valid_len - 1 - window)
+    logits = jnp.where(keep[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bskh->bkgh", p.astype(cache_v.dtype), cache_v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, 1, H, hd).astype(q1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def abstract_kv_cache(cfg, batch: int, seq_len: int, num_attn_layers: int,
+                      long_context: bool = False):
+    """Stacked (per-attention-layer) KV cache.  For long-context decode the
+    sequence dim is sharded along `data` (sequence parallelism) since
+    batch=1 leaves that axis idle."""
+    dt = _dt(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    seq_axis = "decode_seq" if long_context else None
+    shp = (num_attn_layers, batch, seq_len, K, hd)
+    ax = ("layers", "batch", seq_axis, "kv", None)
+    return {
+        "k": Annotated(shp, ax, dt),
+        "v": Annotated(shp, ax, dt),
+    }
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, pos):
+    """Write the new token's k/v at position ``pos`` (scalar)."""
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos, axis=1)
+    return ck, cv

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded gather
+dispatch (Megablocks/MaxText-style), expert-parallel along the `model` axis.
+
+Dispatch strategy: tokens are assigned slots inside each expert's capacity
+buffer via a cumulative-sum over the routing one-hots (no sort); the expert
+FFNs then run as one grouped einsum over the (E, C, D) buffer.  Compiled
+FLOPs therefore scale with ``top_k * tokens * d_ff`` (+ capacity slack), not
+``num_experts * tokens * d_ff`` — which is what the roofline must show for
+MoE archs.  Overflowing tokens are dropped (standard capacity routing);
+their combine weight is zero so the output stays correct up to dropping.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Annotated
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+#: opt-in local (per-batch-shard) dispatch via nested shard_map — the
+#: correct EP design (dispatch never leaves the shard; only the expert
+#: contraction crosses chips).  Disabled by default: the XLA *CPU* SPMD
+#: partitioner check-fails ("Invalid binary instruction opcode copy") on
+#: nested shard_map + scan + remat at 256 devices (§Perf iteration 3c);
+#: re-enable on real TPU toolchains.
+LOCAL_DISPATCH = False
+
+
+def abstract_moe(cfg):
+    m = cfg.moe
+    dt = _dt(cfg)
+    E, F, D = m.num_experts, m.d_ff, cfg.d_model
+    p = {
+        "router": Annotated((D, E), ("embed_no_fsdp", "experts"), dt),
+        "gate": Annotated((E, D, F), ("experts", "embed", "expert_ffn"), dt),
+        "up": Annotated((E, D, F), ("experts", "embed", "expert_ffn"), dt),
+        "down": Annotated((E, F, D), ("experts", "expert_ffn", "embed"), dt),
+    }
+    if m.shared_expert:
+        from repro.models.layers import abstract_mlp
+
+        p["shared"] = abstract_mlp(cfg, d_ff=m.d_ff)
+    return p
+
+
+def capacity(cfg, num_tokens: int) -> int:
+    m = cfg.moe
+    c = int(num_tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU lane alignment
+
+
+def moe(params, x, cfg):
+    """x: (B, S, D) -> (y (B, S, D), aux ()).
+
+    In a pure-pjit context (train_step / prefill on the production mesh)
+    the dispatch runs LOCALLY per batch shard under a nested shard_map
+    (manual over the batch axes, auto over `model`): routing, slotting and
+    the capacity buffers never leave the shard, so the only cross-chip
+    traffic is the EP expert contraction itself.  Letting GSPMD partition
+    the *global* dispatch instead costs 10s of GB/device/layer in
+    all-reduces of the (E, C, F) buffers (§Perf iterations 3a-3c, refuted)
+    — the global path remains as the fallback inside already-manual
+    contexts (BFT worker bodies) and on single-device runs.
+    """
+    import jax.sharding as jsh
+
+    from repro.sharding import mesh_axis_size_here
+
+    B, S, D = x.shape
+    mesh = jsh.get_abstract_mesh()
+    waxes = tuple(
+        a for a in ("pod", "data") if mesh_axis_size_here(a) > 1
+    )
+    dp = 1
+    for a in waxes:
+        dp *= mesh_axis_size_here(a)
+    if LOCAL_DISPATCH and dp > 1 and B % dp == 0:
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(waxes if len(waxes) > 1 else waxes[0], None, None)
+
+        def local(p, xl):
+            y, aux = _moe_global(p, xl, cfg)
+            return y, jax.lax.pmean(aux, waxes)
+
+        # params enter with in_spec P(): shard_map gathers the FSDP (data-
+        # sharded) expert weights once per layer — MBs/device — instead of
+        # partial-summing expert activations (GBs/device).
+        return jax.shard_map(
+            local, mesh=mesh, in_specs=(P(), spec), out_specs=(spec, P()),
+            axis_names=set(waxes), check_vma=False,
+        )(params, x)
+    return _moe_global(params, x, cfg)
+
+
+def _moe_global(params, x, cfg):
+    m = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    E, K = m.num_experts, m.top_k
+    C = capacity(cfg, N)
+    xt = x.reshape(N, D)
+
+    # --- routing (f32 for a stable softmax) -------------------------------
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # (N, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # --- slot assignment: position of each (token, k) within its expert ---
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)   # (N, K, E)
+    flat = onehot.reshape(N * K, E)
+    slot = jnp.cumsum(flat, axis=0) - flat                    # (N*K, E) pre-count
+    slot = (slot * flat).sum(axis=-1).reshape(N, K)           # slot within expert
+    keep = slot < C                                           # capacity drop
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # --- gather tokens into (E, C, D) buffers ------------------------------
+    # token id occupying (expert e, slot c); N marks an empty slot
+    flat_dest = expert_idx * C + jnp.where(keep, slot, E * C)  # (N, K)
+    buf_src = jnp.full((E * C + 1,), N, jnp.int32)
+    token_ids = jnp.broadcast_to(jnp.arange(N)[:, None], (N, K))
+    buf_src = buf_src.at[flat_dest.reshape(-1)].set(
+        token_ids.reshape(-1), mode="drop"
+    )[: E * C]
+    xpad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+    xe = xpad[buf_src].reshape(E, C, D)                        # (E, C, D)
+
+    # --- expert FFNs: grouped einsum over the expert axis ------------------
+    # NOTE on sharding: constraint-only variants (gathering the FSDP expert
+    # weights per use, and/or pinning (E, C, *) buffers to (model, data))
+    # were measured and REFUTED — they trade the partitioner's activation
+    # all-reduces for replicated expert FLOPs or a full dispatch reshuffle
+    # (EXPERIMENTS.md §Perf iterations 3a/3b).  The real fix is the
+    # LOCAL_DISPATCH shard_map path above.
+    g = jnp.einsum("ecd,edf->ecf", xe, params["gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, params["down"])         # (E, C, D)
+
+    # --- combine: weighted scatter back to tokens --------------------------
+    yflat = ye.reshape(E * C, D)
+    safe = jnp.where(keep, flat_dest, 0)
+    ytk = yflat[safe.reshape(-1)].reshape(N, K, D)             # (N, K, D)
+    y = jnp.einsum("nkd,nk->nd", ytk.astype(jnp.float32),
+                   gate_vals).astype(x.dtype)
+
+    if m.shared_expert:
+        from repro.models.layers import mlp
+
+        y = y + mlp(params["shared"], xt)
+
+    # Switch-style load-balance auxiliary loss (from the same routing pass)
+    frac = onehot.astype(jnp.float32).sum(axis=(0, 1)) / (N * K)
+    imp = probs.mean(axis=0)
+    aux = E * jnp.sum(frac * imp)
+    return y.reshape(B, S, D), aux

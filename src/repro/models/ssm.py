@@ -1,0 +1,241 @@
+"""Mamba2 (SSD — state-space duality) block, chunked algorithm.
+
+Train/prefill path: the sequence is split into chunks of length ``Q``; the
+intra-chunk term is a masked quadratic (attention-like) product, the
+inter-chunk term is a lax.scan recurrence over per-chunk states — the
+standard SSD decomposition (arXiv:2405.21060), O(T·Q + T·N·P) instead of a
+length-T sequential scan.
+
+Decode path: O(1) per token via the (B, H, P, N) state and a small causal
+conv ring buffer.
+
+Projections are kept *separate* (z, x, B, C, dt) rather than one fused
+in_proj so each output dim can be sharded cleanly along `model` without
+odd-offset slicing of a sharded dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.sharding import Annotated
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.n_groups, s.d_state
+
+
+def abstract_mamba(cfg):
+    s = cfg.ssm
+    dt = _dt(cfg)
+    D = cfg.d_model
+    d_inner, H, G, N = dims(cfg)
+    return {
+        "in_z": Annotated((D, d_inner), ("embed", "ssm_inner"), dt),
+        "in_x": Annotated((D, d_inner), ("embed", "ssm_inner"), dt),
+        "in_B": Annotated((D, G * N), ("embed", "ssm_state"), dt),
+        "in_C": Annotated((D, G * N), ("embed", "ssm_state"), dt),
+        "in_dt": Annotated((D, H), ("embed", "ssm_heads"), dt),
+        "conv_x": Annotated((s.d_conv, d_inner), ("conv", "ssm_inner"), dt),
+        "conv_B": Annotated((s.d_conv, G * N), ("conv", "ssm_state"), dt),
+        "conv_C": Annotated((s.d_conv, G * N), ("conv", "ssm_state"), dt),
+        "A_log": Annotated((H,), ("ssm_heads",), jnp.float32, init="ssm_a"),
+        "dt_bias": Annotated((H,), ("ssm_heads",), jnp.float32, init="ssm_dt"),
+        "D": Annotated((H,), ("ssm_heads",), jnp.float32, init="ones"),
+        "norm": Annotated((d_inner,), ("norm",), dt, init="ones"),
+        "out": Annotated((d_inner, D), ("ssm_inner", "embed"), dt),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via shifted adds.  x: (B,T,C), w: (W,C)."""
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[W - 1 - i]
+    return out
+
+
+def _ssd_inputs(params, xin, cfg):
+    """Common projections for prefill; returns (z, x, B, C, dt_act)."""
+    d_inner, H, G, N = dims(cfg)
+    Bsz, T, _ = xin.shape
+    z = jnp.einsum("btd,de->bte", xin, params["in_z"])
+    x = jnp.einsum("btd,de->bte", xin, params["in_x"])
+    Bp = jnp.einsum("btd,de->bte", xin, params["in_B"])
+    Cp = jnp.einsum("btd,de->bte", xin, params["in_C"])
+    dtp = jnp.einsum("btd,dh->bth", xin, params["in_dt"])
+    x = jax.nn.silu(_causal_conv(x, params["conv_x"]).astype(jnp.float32))
+    Bp = jax.nn.silu(_causal_conv(Bp, params["conv_B"]).astype(jnp.float32))
+    Cp = jax.nn.silu(_causal_conv(Cp, params["conv_C"]).astype(jnp.float32))
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    x = x.reshape(Bsz, T, H, -1)          # (B,T,H,P) f32
+    Bp = Bp.reshape(Bsz, T, G, N)
+    Cp = Cp.reshape(Bsz, T, G, N)
+    return z, x, Bp, Cp, dt
+
+
+def mamba(params, xin, cfg, initial_state=None, return_state: bool = False):
+    """xin: (B, T, D) -> (B, T, D).  Chunked SSD."""
+    s = cfg.ssm
+    d_inner, H, G, N = dims(cfg)
+    HG = H // G
+    Bsz, T, _ = xin.shape
+    Q = min(s.chunk, T)
+    if T % Q:
+        raise ValueError(f"seq len {T} not a multiple of chunk {Q}")
+    nC = T // Q
+
+    z, x, Bp, Cp, dt = _ssd_inputs(params, xin, cfg)
+
+    A = -jnp.exp(params["A_log"])                       # (H,) negative
+    log_a = dt * A                                      # (B,T,H), <= 0
+
+    # chunk views
+    xc = x.reshape(Bsz, nC, Q, H, -1)
+    Bc = Bp.reshape(Bsz, nC, Q, G, N)
+    Cc = Cp.reshape(Bsz, nC, Q, G, N)
+    dtc = dt.reshape(Bsz, nC, Q, H)
+    lac = log_a.reshape(Bsz, nC, Q, H)
+    L = jnp.cumsum(lac, axis=2)                         # (B,C,Q,H) inclusive
+
+    # ---- intra-chunk (masked quadratic) -------------------------------
+    # Gmat[b,c,h,q,s] = (C_q . B_s) * exp(L_q - L_s) * dt_s  for s <= q
+    cb = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc, Bc)       # (B,C,G,Q,Q)
+    cb = jnp.repeat(cb, HG, axis=2)                     # (B,C,H,Q,Q)
+    dec = L[:, :, :, None, :] - L[:, :, None, :, :]     # L_q - L_s: (B,C,Q,Q,H)
+    dec = jnp.exp(jnp.minimum(dec, 0.0)).transpose(0, 1, 4, 2, 3)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    g = jnp.where(mask[None, None, None], cb * dec, 0.0)
+    g = g * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # * dt_s
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", g, xc)
+
+    # ---- per-chunk local states ----------------------------------------
+    # S_local[b,c,h,n,p] = sum_s exp(L_last - L_s) dt_s B_s x_s
+    wdec = jnp.exp(L[:, :, -1:, :] - L)                 # (B,C,Q,H)
+    Bh = jnp.repeat(Bc, HG, axis=3)                     # (B,C,Q,H,N)
+    wb = Bh * (wdec * dtc)[..., None]
+    S_local = jnp.einsum("bcshn,bcshp->bchnp", wb, xc)  # (B,C,H,N,P)
+
+    # ---- inter-chunk recurrence (scan over chunks) ----------------------
+    chunk_decay = jnp.exp(L[:, :, -1, :])               # (B,C,H)
+    S0 = (
+        jnp.zeros((Bsz, H, N, x.shape[-1]), jnp.float32)
+        if initial_state is None
+        else initial_state
+    )
+
+    def body(S_prev, inputs):
+        Sl, cd = inputs                                  # (B,H,N,P), (B,H)
+        S_next = S_prev * cd[:, :, None, None] + Sl
+        return S_next, S_prev
+
+    S_last, S_prevs = jax.lax.scan(
+        body,
+        S0,
+        (S_local.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)           # (B,C,H,N,P)
+
+    # y_inter[q] = exp(L_q) * C_q . S_prev
+    cg = jnp.repeat(Cc, HG, axis=3)                     # (B,C,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", cg, S_prevs)
+    y_inter = y_inter * jnp.exp(L)[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, -1)
+    y = y + params["D"][None, None, :, None] * x
+    y = y.reshape(Bsz, T, d_inner)
+
+    # gated RMSNorm + out projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": params["norm"]}, y.astype(_dt(cfg)), cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, params["out"])
+    if return_state:
+        return out, S_last
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def abstract_mamba_cache(cfg, batch: int, num_mamba_layers: int):
+    s = cfg.ssm
+    d_inner, H, G, N = dims(cfg)
+    P = s.head_dim
+    return {
+        "state": Annotated(
+            (num_mamba_layers, batch, H, N, P),
+            ("layers", "batch", "ssm_heads", None, None),
+            jnp.float32,
+        ),
+        "conv_x": Annotated(
+            (num_mamba_layers, batch, s.d_conv - 1, d_inner),
+            ("layers", "batch", None, "ssm_inner"),
+            _dt(cfg),
+        ),
+        "conv_B": Annotated(
+            (num_mamba_layers, batch, s.d_conv - 1, G * N),
+            ("layers", "batch", None, "ssm_state"),
+            _dt(cfg),
+        ),
+        "conv_C": Annotated(
+            (num_mamba_layers, batch, s.d_conv - 1, G * N),
+            ("layers", "batch", None, "ssm_state"),
+            _dt(cfg),
+        ),
+    }
+
+
+def _conv_step(x_new, conv_cache, w):
+    """x_new: (B,C); conv_cache: (B,W-1,C) of *previous raw* inputs."""
+    window = jnp.concatenate([conv_cache, x_new[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window, w)
+    new_cache = window[:, 1:]
+    return y, new_cache
+
+
+def mamba_decode_step(params, xin, cache, cfg):
+    """One-token decode.  xin: (B, D); cache: dict with state/conv_*.
+
+    Returns (out (B, D), new_cache).
+    """
+    d_inner, H, G, N = dims(cfg)
+    z = xin @ params["in_z"]
+    x = xin @ params["in_x"]
+    Bp = xin @ params["in_B"]
+    Cp = xin @ params["in_C"]
+    dtp = xin @ params["in_dt"]
+
+    x, ncx = _conv_step(x, cache["conv_x"], params["conv_x"])
+    Bp, ncb = _conv_step(Bp, cache["conv_B"], params["conv_B"])
+    Cp, ncc = _conv_step(Cp, cache["conv_C"], params["conv_C"])
+    x = jax.nn.silu(x.astype(jnp.float32)).reshape(-1, H, cfg.ssm.head_dim)
+    Bp = jax.nn.silu(Bp.astype(jnp.float32)).reshape(-1, G, N)
+    Cp = jax.nn.silu(Cp.astype(jnp.float32)).reshape(-1, G, N)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+
+    a = jnp.exp(dt * -jnp.exp(params["A_log"]))          # (B,H)
+    HG = H // G
+    Bh = jnp.repeat(Bp, HG, axis=1)                      # (B,H,N)
+    Ch = jnp.repeat(Cp, HG, axis=1)
+    S = cache["state"]                                   # (B,H,N,P)
+    S = S * a[:, :, None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhnp", Bh, x, dt
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, S) + params["D"][None, :, None] * x
+    y = y.reshape(-1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": params["norm"]}, y.astype(_dt(cfg)), cfg.norm_eps)
+    out = y @ params["out"]
+    new_cache = {"state": S, "conv_x": ncx, "conv_B": ncb, "conv_C": ncc}
+    return out, new_cache

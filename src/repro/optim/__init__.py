@@ -1,0 +1,12 @@
+from repro.optim.optimizer import (  # noqa: F401
+    OptConfig,
+    abstract_opt_state,
+    init_opt_state,
+    lr_at,
+    opt_update,
+)
+from repro.optim.compression import (  # noqa: F401
+    compress_tree,
+    decompress_tree,
+    init_error_feedback,
+)

@@ -1,0 +1,51 @@
+"""Gradient compression with error feedback (paper §5 generalization).
+
+The paper notes its schemes apply unchanged when workers send *compressed*
+gradients [1, 2, 19, 20] — the detection code operates on the compressed
+symbols.  We implement signSGD-style 1-bit compression (Bernstein et al.,
+2018) with per-tensor scale and error feedback (the residual is carried to
+the next iteration so compression stays unbiased over time).
+
+Compression composes with the coding scheme trivially: replicas of an
+identical gradient produce identical compressed symbols, so detection /
+voting compares the compressed form directly (cheaper symbols — the whole
+point of the generalization).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, errors):
+    """sign compression with error feedback.
+
+    Returns (compressed {sign int8, scale f32} tree, new_errors).
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        scale = jnp.mean(jnp.abs(corrected))
+        sign = jnp.sign(corrected)
+        decompressed = sign * scale
+        new_e = corrected - decompressed
+        return {"sign": sign.astype(jnp.int8), "scale": scale}, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
+        [o[1] for o in out]
+    )
+
+
+def decompress_tree(compressed):
+    return jax.tree.map(
+        lambda c: c["sign"].astype(jnp.float32) * c["scale"],
+        compressed,
+        is_leaf=lambda x: isinstance(x, dict) and "sign" in x,
+    )

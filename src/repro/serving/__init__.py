@@ -1,0 +1,1 @@
+from repro.serving.engine import ServeEngine, audit_decode, serve_step  # noqa: F401

@@ -1,0 +1,9 @@
+from repro.train.steps import (  # noqa: F401
+    AttackConfig,
+    StepConfig,
+    make_check_step,
+    make_fast_step,
+    make_filter_step,
+    make_identify_step,
+)
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,38 @@
+"""Standard (non-BFT-instrumented) pjit step functions.
+
+These are the production data-path steps the dry-run lowers for every
+(arch x shape) cell: FSDP+TP train step, prefill, and single-token decode.
+The BFT-instrumented shard_map steps (repro.train.steps) are additionally
+dry-run for the paper-representative cells — see launch/dryrun.py --bft.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models import model as M
+from repro.optim import OptConfig, opt_update
+
+
+def make_train_step(cfg, opt: OptConfig):
+    def train_step(params, opt_state, batch, step):
+        (loss, mets), grads = jax.value_and_grad(M.train_loss, has_aux=True)(
+            params, batch, cfg
+        )
+        new_params, new_opt, om = opt_update(opt, grads, opt_state, params, step)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, token, pos, cache):
+        return M.decode_step(params, token, pos, cache, cfg)
+
+    return decode_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real (single) device.  Multi-worker BFT
+# integration tests spawn subprocesses with their own XLA_FLAGS
+# (tests/test_bft_integration.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

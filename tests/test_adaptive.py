@@ -1,0 +1,73 @@
+"""Paper §4.3: closed-form adaptive q* (eq. 4) and λ_t (eq. 5)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adaptive
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    f_t=st.integers(0, 12),
+    p=st.floats(0.0, 1.0),
+    lam=st.floats(0.0, 1.0),
+)
+def test_closed_form_matches_numeric_minimizer(f_t, p, lam):
+    q_c = adaptive.q_star(f_t, p, lam)
+    q_n = adaptive.q_star_numeric(f_t, p, lam, grid=4001)
+    assert abs(q_c - q_n) < 2e-3
+
+
+def test_boundary_high_loss_checks_always():
+    # ℓ_t -> ∞ ⇒ λ -> 1 ⇒ q* -> 1 (paper boundary condition)
+    lam = adaptive.lam_from_loss(50.0)
+    assert lam > 0.999
+    assert adaptive.q_star(3, 0.5, lam) > 0.99
+
+
+def test_boundary_p_zero_never_checks():
+    assert adaptive.q_star(3, 0.0, 0.9) == 0.0
+
+
+def test_boundary_all_identified_never_checks():
+    # κ_t = f ⇒ f_t = 0 ⇒ q* = 0
+    assert adaptive.q_star(0, 0.9, 0.9) == 0.0
+
+
+def test_lambda_monotone_in_loss():
+    ls = [0.0, 0.5, 1.0, 3.0, 10.0]
+    lams = [adaptive.lam_from_loss(l) for l in ls]
+    assert lams == sorted(lams)
+    assert lams[0] == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(f_t=st.integers(1, 10), q=st.floats(0.0, 1.0))
+def test_efficiency_formula_eq2(f_t, q):
+    # comEff(q) = 1 - q*2f/(2f+1), within [1/(2f+1), 1]
+    eff = adaptive.com_eff(q, f_t)
+    assert math.isclose(eff, 1 - q * (2 * f_t) / (2 * f_t + 1), rel_tol=1e-12)
+    assert 1 / (2 * f_t + 1) - 1e-12 <= eff <= 1 + 1e-12
+
+
+def test_paper_delta_example():
+    # paper: q = δ(2f+1)/(2f) gives expected efficiency >= 1-δ
+    f, delta = 3, 0.1
+    q = delta * (2 * f + 1) / (2 * f)
+    assert adaptive.com_eff(q, f) >= 1 - delta - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(f_t=st.integers(1, 8), p=st.floats(0.01, 1.0), lam=st.floats(0.01, 0.99))
+def test_qstar_is_minimizer(f_t, p, lam):
+    """q* achieves objective <= any probe point (convexity check)."""
+
+    def obj(q):
+        return (1 - lam) * (1 - adaptive.com_eff(q, f_t)) ** 2 + lam * (
+            adaptive.prob_faulty_update(q, f_t, p)
+        ) ** 2
+
+    qs = adaptive.q_star(f_t, p, lam)
+    for probe in (0.0, 0.25, 0.5, 0.75, 1.0):
+        assert obj(qs) <= obj(probe) + 1e-9

@@ -1,0 +1,55 @@
+"""Replica-group assignment properties (paper §4.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import assignment as A
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 64), f=st.integers(0, 10), data=st.data())
+def test_assignment_invariants(n, f, data):
+    if 2 * f >= n:
+        return
+    active = np.ones(n, bool)
+    # optionally eliminate a few workers
+    n_elim = data.draw(st.integers(0, max(0, n - (2 * f + 1))))
+    if n_elim:
+        idx = data.draw(
+            st.lists(st.integers(0, n - 1), min_size=n_elim, max_size=n_elim,
+                     unique=True)
+        )
+        active[idx] = False
+    for builder, r in [
+        (A.fast_assignment, 1),
+        (lambda a: A.check_assignment(a, max(1, f)), max(1, f) + 1),
+        (lambda a: A.identify_assignment(a, max(1, f)), 2 * max(1, f) + 1),
+    ]:
+        if active.sum() < r:
+            continue
+        a = builder(active)
+        assert a.replication == r
+        # every group has exactly r members, all active
+        for g in range(a.num_shards):
+            members = np.flatnonzero(a.group_of_worker == g)
+            assert len(members) == r
+            assert active[members].all()
+        # inactive workers never assigned
+        assert (a.group_of_worker[~active] == -1).all()
+        # weights sum to 1 (exact mean aggregation)
+        np.testing.assert_allclose(a.weight.sum(), 1.0, rtol=1e-6)
+        # efficiency = used/computed = 1/r
+        np.testing.assert_allclose(a.efficiency(), 1.0 / r, rtol=1e-6)
+
+
+def test_group_members_share_rows():
+    active = np.ones(8, bool)
+    a = A.check_assignment(active, 1)  # r=2, m=4
+    rows = A.shard_batch_indices(a, 32)
+    for g in A.group_members(a):
+        assert (rows[g] == rows[g[0]]).all()
+
+
+def test_not_enough_workers_raises():
+    with pytest.raises(ValueError):
+        A.build_assignment(np.zeros(4, bool), 2)

@@ -1,0 +1,78 @@
+"""End-to-end BFT integration: runs the 8-worker scenario in a subprocess
+(its own XLA device count) and asserts the paper's claims:
+
+  * exact fault-tolerance: attacked-but-protected run converges like the
+    clean run; unprotected run does not;
+  * Byzantine workers are identified (no false positives) and eliminated;
+  * deterministic scheme efficiency ~ 1/(f_t+1);
+  * checkpoint restart is loss-bit-deterministic;
+  * crash / elastic recovery keeps training.
+"""
+import ast
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCENARIO = os.path.join(os.path.dirname(__file__), "scenarios", "bft_scenario.py")
+
+
+@pytest.fixture(scope="module")
+def results():
+    proc = subprocess.run(
+        [sys.executable, SCENARIO],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SCENARIO_DONE" in proc.stdout, proc.stdout[-4000:]
+    out = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            k, v = line[len("RESULT "):].split("=", 1)
+            try:
+                out[k] = ast.literal_eval(v)
+            except (ValueError, SyntaxError):
+                out[k] = v
+    return out
+
+
+def test_exact_fault_tolerance(results):
+    # protected run tracks the clean run closely...
+    assert results["rand_loss"] <= results["clean_loss"] + 0.3
+    # ...and beats the unprotected run
+    assert results["rand_loss"] < results["unprotected_loss"] - 0.2
+
+
+def test_byzantine_identified_no_false_positives(results):
+    assert results["rand_false_pos"] == []
+    assert set(results["rand_identified"]) <= {2, 5}
+    assert len(results["rand_identified"]) >= 1
+
+
+def test_randomized_efficiency_above_paper_bound(results):
+    # eq. 2 with f=2, q=0.3: E[eff] >= 1 - 0.3*4/5 = 0.76
+    assert results["rand_eff"] >= 0.76 - 0.05
+
+
+def test_deterministic_scheme(results):
+    assert results["det_identified"] == [1]
+    # after eliminating the 1 Byzantine worker, f_t=1: clean checked
+    # iterations run at efficiency 1/(f_t+1) = 1/2
+    assert abs(results["det_last_eff"] - 0.5) < 1e-6
+
+
+def test_full_detection_mode_identifies(results):
+    assert results["full_identified"] == [3]
+
+
+def test_restart_deterministic(results):
+    assert results["restart_step"] == 10
+    assert results["restart_drift"] <= 1e-5
+
+
+def test_elastic(results):
+    assert results["elastic_active_after_crash"] == 6
+    assert results["elastic_active_after_recover"] == 7
+    assert results["elastic_loss_finite"] is True

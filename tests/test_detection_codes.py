@@ -1,0 +1,136 @@
+"""Detection codes & sketches (paper §4.1, Fig. 2; DESIGN.md §7 sketch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import detection as D
+from repro.core.codes import Fig2Code, ReplicationCode
+
+
+# ---------------------------------------------------------------------------
+# CountSketch
+# ---------------------------------------------------------------------------
+
+def test_sketch_linear():
+    g1 = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    g2 = jax.random.normal(jax.random.PRNGKey(1), (1000,))
+    k = 64
+    s = D.hash_sign_sketch
+    np.testing.assert_allclose(
+        s(g1 + 2 * g2, 42, k), s(g1, 42, k) + 2 * s(g2, 42, k),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_sketch_equal_iff_equal_inputs():
+    g = jax.random.normal(jax.random.PRNGKey(0), (5000,))
+    s1 = D.hash_sign_sketch(g, 7, 128)
+    s2 = D.hash_sign_sketch(g, 7, 128)
+    np.testing.assert_array_equal(s1, s2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(10, 2000),
+    key=st.integers(0, 2**31 - 1),
+    coord=st.data(),
+)
+def test_sketch_detects_single_coordinate_tamper(d, key, coord):
+    g = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    i = coord.draw(st.integers(0, d - 1))
+    g2 = g.at[i].add(1.0)
+    s1 = D.hash_sign_sketch(g, key, 64)
+    s2 = D.hash_sign_sketch(g2, key, 64)
+    assert float(jnp.abs(s1 - s2).max()) > 0.5  # ±1 signs: |delta| = 1
+
+
+def test_sketch_tree_matches_leafwise_sum():
+    tree = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (100, 3)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (7,)),
+    }
+    s = D.sketch_tree(tree, 99, 32)
+    assert s.shape == (32,)
+    # tampering any leaf changes the tree sketch
+    tree2 = {**tree, "b": tree["b"].at[0].add(0.5)}
+    s2 = D.sketch_tree(tree2, 99, 32)
+    assert float(jnp.abs(s - s2).max()) > 0.1
+
+
+# ---------------------------------------------------------------------------
+# group detection
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_detect_groups_flags_exactly_tampered_groups(data):
+    n, k, G = 12, 16, 4
+    gid = jnp.asarray(np.repeat(np.arange(G), n // G), jnp.int32)
+    base = jax.random.normal(jax.random.PRNGKey(0), (G, k))
+    symbols = base[np.asarray(gid)]
+    bad_groups = data.draw(
+        st.lists(st.integers(0, G - 1), max_size=G, unique=True)
+    )
+    bad_workers = []
+    for g in bad_groups:
+        w = int(np.flatnonzero(np.asarray(gid) == g)[0])
+        symbols = symbols.at[w].add(1.0)
+        bad_workers.append(w)
+    fault, mismatch = D.detect_groups(symbols, gid, G)
+    assert set(np.flatnonzero(fault)) == set(bad_groups)
+    if not bad_groups:
+        assert not mismatch.any()
+
+
+def test_detect_groups_idle_workers_ignored():
+    gid = jnp.asarray([0, 0, -1, 1, 1, -1], jnp.int32)
+    sym = jnp.ones((6, 4))
+    sym = sym.at[2].set(99.0)  # idle worker: must not trip detection
+    fault, mism = D.detect_groups(sym, gid, 2)
+    assert not fault.any() and not mism.any()
+
+
+# ---------------------------------------------------------------------------
+# replication + Fig-2 codes
+# ---------------------------------------------------------------------------
+
+def test_replication_code_check():
+    code = ReplicationCode(f=2)
+    sym = jnp.ones((3, 50))
+    assert bool(code.check(sym))
+    assert not bool(code.check(sym.at[1, 3].add(1e-2)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(which=st.integers(0, 2), tamper=st.booleans())
+def test_fig2_code_detects_any_single_fault(which, tamper):
+    key = jax.random.PRNGKey(3)
+    g1, g2, g3 = jax.random.normal(key, (3, 40))
+    c = [
+        Fig2Code.encode(0, g1, g2),
+        Fig2Code.encode(1, g2, g3),
+        Fig2Code.encode(2, g3, g1),
+    ]
+    total = g1 + g2 + g3
+    if tamper:
+        c[which] = c[which] + 0.1
+    ok = bool(Fig2Code.check(*c))
+    assert ok == (not tamper)
+    if not tamper:
+        np.testing.assert_allclose(
+            Fig2Code.decode(*c), total, rtol=1e-5, atol=1e-5
+        )
+
+
+def test_fig2_estimates_agree_on_sum():
+    key = jax.random.PRNGKey(4)
+    g1, g2, g3 = jax.random.normal(key, (3, 16))
+    c1 = Fig2Code.encode(0, g1, g2)
+    c2 = Fig2Code.encode(1, g2, g3)
+    c3 = Fig2Code.encode(2, g3, g1)
+    e1, e2, e3 = Fig2Code.estimates(c1, c2, c3)
+    s = g1 + g2 + g3
+    for e in (e1, e2, e3):
+        np.testing.assert_allclose(e, s, rtol=1e-5, atol=1e-5)

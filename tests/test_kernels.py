@@ -1,0 +1,106 @@
+"""Per-kernel allclose tests vs the ref.py oracles — shape/dtype sweeps,
+interpret=True (CPU validation of the TPU kernels)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("d", [64, 256, 1000, 8192, 70001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sketch_matches_ref(d, dtype):
+    g = jax.random.normal(jax.random.PRNGKey(d), (d,), dtype)
+    s_k = ops.sketch(g, 12345, k=256)
+    s_r = ref.sketch_ref(g, 12345, 256)
+    np.testing.assert_allclose(s_k, s_r, rtol=5e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("k", [64, 128, 512])
+def test_sketch_k_sweep(k):
+    g = jax.random.normal(jax.random.PRNGKey(0), (5000,), jnp.float32)
+    np.testing.assert_allclose(
+        ops.sketch(g, 7, k=k), ref.sketch_ref(g, 7, k), rtol=2e-5, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("R,d", [(3, 100), (5, 4096), (7, 10000), (9, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_relmax_matches_ref(R, d, dtype):
+    reps = jax.random.normal(jax.random.PRNGKey(R), (R, d), dtype)
+    rel_k = ops.pairwise_relmax(reps.astype(jnp.float32))
+    rel_r = ref.pairwise_maxdiff_ref(reps.astype(jnp.float32))
+    np.testing.assert_allclose(rel_k, rel_r, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("f", [1, 2, 3])
+def test_kernel_vote_matches_core_semantics(f):
+    r = 2 * f + 1
+    honest = jax.random.normal(jax.random.PRNGKey(f), (3000,))
+    reps = jnp.tile(honest[None], (r, 1))
+    bad = list(range(f))
+    for b in bad:
+        reps = reps.at[b].multiply(-1.0)
+    value, faulty, has_maj = ops.vote(reps)
+    assert bool(has_maj)
+    np.testing.assert_array_equal(value, honest)
+    assert set(np.flatnonzero(faulty)) == set(bad)
+
+
+@pytest.mark.parametrize("n_sym,m,d", [(3, 3, 100), (4, 2, 4096), (8, 8, 2049)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_coded_encode_matches_ref(n_sym, m, d, dtype):
+    key = jax.random.PRNGKey(0)
+    C = jax.random.normal(key, (n_sym, m), jnp.float32)
+    G = jax.random.normal(key, (m, d), dtype)
+    np.testing.assert_allclose(
+        ops.coded_encode(C, G), ref.coded_encode_ref(C, G),
+        rtol=5e-3, atol=5e-3,
+    )
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,K,hd,causal,window",
+    [
+        (2, 128, 128, 4, 2, 64, True, None),
+        (1, 64, 192, 6, 6, 32, True, None),     # prefill continuation
+        (2, 128, 128, 4, 1, 64, True, 48),      # sliding window, MQA
+        (1, 96, 96, 8, 4, 64, False, None),     # bidirectional (encoder)
+        (1, 100, 100, 2, 2, 32, True, None),    # ragged (padding path)
+    ],
+)
+def test_flash_attention_matches_ref(B, Sq, Sk, H, K, hd, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, K, hd), jnp.float32)
+    o_ref = ref.mha_ref(q, k, v, causal=causal, window=window)
+    o_pal = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                bq=32, bk=32)
+    np.testing.assert_allclose(o_pal, o_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32), dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), dtype)
+    o_ref = ref.mha_ref(q, k, v, causal=True)
+    o_pal = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    np.testing.assert_allclose(
+        o_pal.astype(jnp.float32), o_ref.astype(jnp.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_flash_blocksize_sweep():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.float32)
+    o_ref = ref.mha_ref(q, k, v, causal=True)
+    for bq, bk in [(16, 16), (32, 64), (128, 128), (64, 16)]:
+        o = ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+        np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
