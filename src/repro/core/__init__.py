@@ -14,8 +14,19 @@ from repro.core import (  # noqa: F401
     detection,
     draco,
     efficiency,
+    engine,
     filters,
     identification,
     randomized,
+)
+from repro.core.engine import (  # noqa: F401
+    BatchResult,
+    FaultEvent,
+    FaultPattern,
+    ModeSpec,
+    SCENARIOS,
+    ScenarioMatrix,
+    TrialSpec,
+    run_batch,
 )
 from repro.core.randomized import BFTConfig, ProtocolState  # noqa: F401

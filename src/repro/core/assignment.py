@@ -92,6 +92,42 @@ def fast_assignment(active: np.ndarray, rng=None) -> Assignment:
     return build_assignment(active, 1, rng)
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchedAssignment:
+    """Assignments for B independent trials, one row per trial.
+
+    Same semantics as ``Assignment`` per row; built without per-trial
+    Python loops so the scenario engine can lay out a whole step's shard
+    structure in a handful of vectorized ops.
+    """
+
+    shard_of_worker: np.ndarray   # (B, n) int32
+    group_of_worker: np.ndarray   # (B, n) int32, -1 = idle
+    weight: np.ndarray            # (B, n) float32
+    num_shards: np.ndarray        # (B,) int64
+
+
+def fast_assignment_batched(active: np.ndarray) -> BatchedAssignment:
+    """Vectorized ``fast_assignment`` over a (B, n) bool active matrix.
+
+    Row b reproduces ``fast_assignment(active[b])`` exactly: the g-th
+    active worker (ascending index order — no RNG in fast mode) owns
+    shard g with weight 1/m; idle workers keep shard 0, group -1,
+    weight 0.
+    """
+    active = np.asarray(active, bool)
+    rank = np.cumsum(active, axis=1) - 1          # (B, n): active-rank
+    m = active.sum(axis=1)                        # (B,)
+    if (m == 0).any():
+        raise ValueError("trial with zero active workers")
+    shard = np.where(active, rank, 0).astype(np.int32)
+    group = np.where(active, rank, -1).astype(np.int32)
+    weight = np.where(active, 1.0 / np.maximum(m, 1)[:, None], 0.0).astype(
+        np.float32
+    )
+    return BatchedAssignment(shard, group, weight, m)
+
+
 def check_assignment(active: np.ndarray, f_t: int, rng=None) -> Assignment:
     return build_assignment(active, f_t + 1, rng)
 

@@ -1,0 +1,1019 @@
+"""Batched scenario engine: B independent protocol trials in one pass.
+
+The paper's claims (eq. 2 efficiency bound, §4.2 almost-sure
+identification time, §4.3 adaptive q*) are statistical — they only show
+up over sweeps of seeds × attacks × modes.  ``run_protocol`` in
+repro.core.simulation simulates ONE trial at a time in a Python loop, so
+a 64-cell sweep reruns the whole master/worker loop 64 times.  This
+module runs the same protocol for B trials simultaneously:
+
+ * worker gradients for ALL trials come from batched matmuls — per step,
+   one (B, m, 1, rows) @ (m, rows, d) shard-gradient contraction per
+   distinct replication level plus a (B, n, d) gather, instead of B × n
+   Python-level calls;
+ * protocol state (``active``, ``identified``, ``alpha``/``beta``) is
+   held as (B, n) arrays; per-trial ``ProtocolState`` objects are row
+   VIEWS into those arrays, so the sequential state machine from
+   repro.core.randomized is reused verbatim where trials must replay
+   their seeded RNG streams;
+ * check-iteration decisions are pre-drawn: ``decide_rng`` is a
+   dedicated stream that advances exactly once per iteration, so the
+   engine draws each trial's whole (T,) coin-flip sequence up front
+   (``Generator.random(T)`` equals T sequential draws) and decides every
+   fixed-q trial for a step in one vectorized compare;
+ * efficiency accounting is accumulated in (B,) arrays and materialized
+   into per-trial ``EfficiencyMeter`` objects at the end.
+
+Exactness contract: for a ``TrialSpec`` whose fields match
+``run_protocol``'s keyword arguments (and ``onset=0``, no fault events),
+``run_batch`` reproduces ``run_protocol``'s ``final_error``,
+``efficiency``, ``identify_step``, losses and q-trace BITWISE.  Both
+paths share the numerical primitives below, and every batched matmul
+keeps the per-item operand shapes of the serial path (numpy loops
+leading batch dims, calling the same BLAS routine per item), so the
+floating-point stream is identical for any batch size.
+tests/test_engine_parity.py pins this down.
+
+Beyond parity, trials may declare engine-only scenario features:
+``onset`` (late-onset Byzantine behavior — workers behave honestly
+before step ``onset``) and ``events`` (crash / recover schedules driving
+``ProtocolState.on_crash`` / ``on_recover``, the elastic-membership
+path).  A batch may freely mix n, f, modes, attacks and per-trial
+problems.
+
+``ScenarioMatrix`` is the declarative front-end: a named grid of
+attacks × modes × fault patterns × seeds that expands to a trial batch;
+``SCENARIOS`` registers the matrices used by benchmarks and
+tests/scenarios.  See docs/scenarios.md for the vocabulary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core import adaptive, filters as filters_mod
+from repro.core.assignment import (
+    Assignment,
+    BatchedAssignment,
+    fast_assignment_batched,
+)
+from repro.core.identification import majority_vote_np
+from repro.core.randomized import BFTConfig, ProtocolState, decide_generator
+
+# ---------------------------------------------------------------------------
+# Shared numerical primitives (used by BOTH run_protocol and the engine).
+#
+# All batched contractions are np.matmul with leading batch dimensions:
+# numpy iterates the batch dims and issues the SAME per-item BLAS call
+# the serial (B=1) path issues, so results are bitwise identical no
+# matter how many trials share the pass.  (Reshaping into one big GEMM
+# would be faster still but changes the accumulation pattern — verified
+# non-identical — so we deliberately stay per-item.)
+# ---------------------------------------------------------------------------
+
+
+def residuals(A_b: np.ndarray, y_b: np.ndarray, W: np.ndarray,
+              out: np.ndarray | None = None) -> np.ndarray:
+    """(B, I, d), (B, I), (B, d) -> (B, I) residual A w - y per trial.
+
+    ``out``: optional (B, I, 1) scratch buffer (the engine reuses one
+    across steps; the result aliases it)."""
+    prod = np.matmul(A_b, W[:, :, None], out=out)
+    return np.subtract(prod[:, :, 0], y_b, out=prod[:, :, 0])
+
+
+def losses_of(resid: np.ndarray) -> np.ndarray:
+    """(B, I) residuals -> (B,) mean-squared losses."""
+    return (resid ** 2).mean(axis=1)
+
+
+def shard_gradients(A_chunks: np.ndarray, resid_chunks: np.ndarray,
+                    rows: int) -> np.ndarray:
+    """Least-squares shard gradients, one contraction per (trial, shard).
+
+    A_chunks: (B|1, m, rows, d) — the global batch cut into m contiguous
+    shards of ``rows`` rows (remainder dropped); resid_chunks:
+    (B, m, 1, rows).  Returns (B, m, d): 2/rows * A_s^T resid_s.
+    """
+    return 2.0 * np.matmul(resid_chunks, A_chunks)[:, :, 0, :] / rows
+
+
+def worker_gradients(shard_g: np.ndarray, shard_of_worker: np.ndarray,
+                     group_of_worker: np.ndarray) -> np.ndarray:
+    """Scatter shard gradients to the workers that computed them.
+
+    shard_g: (B, m, d); shard/group_of_worker: (B, n).  Every member of
+    a replica group receives (a copy of) its shard's gradient; idle
+    workers (group -1) get zeros.  -> (B, n, d)
+    """
+    B = shard_g.shape[0]
+    g = shard_g[_arange(B)[:, None], shard_of_worker]
+    idle = group_of_worker < 0
+    if not idle.any():            # nobody idle: the mask is all-ones
+        return g
+    g[idle] = 0.0
+    return g
+
+
+_ARANGE = np.arange(1024)
+
+
+def _arange(k: int) -> np.ndarray:
+    global _ARANGE
+    if len(_ARANGE) < k:
+        _ARANGE = np.arange(2 * k)
+    return _ARANGE[:k]
+
+
+def aggregate(weight: np.ndarray, grads: np.ndarray) -> np.ndarray:
+    """(B, n) float32 weights x (B, n, d) grads -> (B, d) updates.
+
+    Mixed-dtype matmul promotes the weights to float64 internally —
+    verified bitwise-identical to an explicit astype."""
+    return np.matmul(weight[:, None, :], grads)[:, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# Trial specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """Membership-churn event applied at the START of ``step``."""
+
+    step: int
+    kind: str                    # "crash" | "recover"
+    workers: tuple[int, ...]
+
+    def __post_init__(self):
+        if self.kind not in ("crash", "recover"):
+            raise ValueError(f"unknown fault event kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialSpec:
+    """One protocol trial.  Fields mirror ``run_protocol``'s keyword
+    arguments exactly; ``onset``/``events`` are engine-only extensions
+    (late-onset Byzantine behavior, crash/recover churn)."""
+
+    n: int = 8
+    f: int = 2
+    byz: tuple[int, ...] = ()
+    attack: str = "sign_flip"
+    p_tamper: float = 0.8
+    steps: int = 400
+    q: float | None = 0.4
+    mode: str = "randomized"
+    filter_name: str = "median"
+    selective: bool = False
+    lr: float = 0.05
+    seed: int = 1
+    problem_seed: int = 0
+    onset: int = 0               # byz workers behave honestly before this step
+    events: tuple[FaultEvent, ...] = ()
+    label: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "byz", tuple(self.byz))
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def protocol_kwargs(self) -> dict:
+        """The run_protocol(**kwargs) equivalent of this spec (parity
+        harnesses; drops the engine-only fields)."""
+        return {k: getattr(self, k) for k in (
+            "n", "f", "byz", "attack", "p_tamper", "steps", "q", "mode",
+            "filter_name", "selective", "lr", "seed", "problem_seed")}
+
+
+# ---------------------------------------------------------------------------
+# Batched protocol state: (B, n) arrays + per-trial views
+# ---------------------------------------------------------------------------
+
+
+class BatchedProtocolState:
+    """Protocol state for B trials as (B, n_max) arrays.
+
+    ``trial(b)`` hands back a ``ProtocolState`` whose array fields are
+    row views into the batch arrays: the sequential state machine
+    (decide_check, on_identified, on_crash, ...) mutates the batched
+    storage in place, so the engine gets vectorized reads (active masks,
+    fast-path assignments) AND bit-exact per-trial semantics for free.
+    """
+
+    def __init__(self, cfgs: list[BFTConfig]):
+        B = len(cfgs)
+        self.n_max = max(c.n for c in cfgs)
+        self.active = np.zeros((B, self.n_max), bool)
+        self.identified = np.zeros((B, self.n_max), bool)
+        self.crashed = np.zeros((B, self.n_max), bool)
+        self.alpha = np.full((B, self.n_max), 0.5)
+        self.beta = np.full((B, self.n_max), 0.5)
+        self.states: list[ProtocolState] = []
+        for b, cfg in enumerate(cfgs):
+            k = cfg.n
+            self.active[b, :k] = True
+            st = ProtocolState(
+                cfg=cfg,
+                active=self.active[b, :k],
+                identified=self.identified[b, :k],
+                crashed=self.crashed[b, :k],
+                alpha=self.alpha[b, :k],
+                beta=self.beta[b, :k],
+                rng=np.random.default_rng(cfg.seed),
+                decide_rng=decide_generator(cfg.seed),
+            )
+            self.states.append(st)
+
+    def trial(self, b: int) -> ProtocolState:
+        return self.states[b]
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+# Vectorized attack application: ATTACKS semantics row-by-row, applied to
+# a (k, d) stack of tampered gradient rows at once.  "noise" reseeds a
+# generator PER ROW in the serial path, so it (and custom callables)
+# falls back to the per-row loop.
+_VEC_ATTACKS: dict[str, Callable] = {
+    "none": lambda g: g,
+    "sign_flip": lambda g: -5.0 * g,
+    "scale": lambda g: 10.0 * g,
+    "drift": lambda g: g + 1.0,
+    "zero": lambda g: np.zeros_like(g),
+}
+
+
+def _attack_table():
+    from repro.core.simulation import ATTACKS
+
+    return ATTACKS
+
+
+def _grouped_rows(n: int, act_idx: np.ndarray, r: int,
+                  rng: np.random.Generator):
+    """``build_assignment(active, r, rng)`` without the per-group Python
+    loop — identical RNG consumption (one permutation of the active
+    indices) and bitwise-identical output arrays.
+
+    Returns (Assignment, members) with members (m, r): group g's worker
+    ids SORTED within each group — replica order must match the serial
+    path (group_members -> flatnonzero -> ascending ids) because the
+    majority vote's winner — and so the voted VALUE — depends on input
+    order whenever replicas agree within tau without being bitwise
+    identical (e.g. at the converged noise floor).
+    """
+    perm = rng.permutation(act_idx)
+    m = len(perm) // r
+    if m == 0:
+        raise ValueError(
+            f"not enough active workers ({len(perm)}) for replication {r}"
+        )
+    shard = np.zeros(n, np.int32)
+    group = np.full(n, -1, np.int32)
+    weight = np.zeros(n, np.float32)
+    mem = perm[: m * r]
+    gid = _gid(m, r)
+    shard[mem] = gid
+    group[mem] = gid
+    weight[mem] = 1.0 / (r * m)
+    a = Assignment(shard, group, weight, m, r, np.zeros(n, np.int32))
+    return a, np.sort(mem.reshape(m, r), axis=1)
+
+
+_GID_CACHE: dict[tuple, np.ndarray] = {}
+
+
+def _gid(m: int, r: int) -> np.ndarray:
+    key = (m, r)
+    out = _GID_CACHE.get(key)
+    if out is None:
+        out = _GID_CACHE[key] = np.repeat(np.arange(m, dtype=np.int32), r)
+    return out
+
+
+def _grouped_rows_into(batch_a: BatchedAssignment, b: int,
+                       act_idx: np.ndarray, r: int,
+                       rng: np.random.Generator) -> tuple:
+    """In-place variant of ``_grouped_rows`` for the engine's hot check /
+    draco path: writes trial b's rows of the batch assignment directly
+    (same RNG consumption, same values) and returns (m, members(m, r))."""
+    perm = rng.permutation(act_idx)
+    m = len(perm) // r
+    if m == 0:
+        raise ValueError(
+            f"not enough active workers ({len(perm)}) for replication {r}"
+        )
+    mem = perm[: m * r]
+    gid = _gid(m, r)
+    shard = batch_a.shard_of_worker[b]
+    group = batch_a.group_of_worker[b]
+    weight = batch_a.weight[b]
+    shard[:] = 0
+    group[:] = -1
+    weight[:] = 0.0
+    shard[mem] = gid
+    group[mem] = gid
+    weight[mem] = 1.0 / (r * m)
+    batch_a.num_shards[b] = m
+    # sorted for the same replica-order reason as _grouped_rows
+    return m, np.sort(mem.reshape(m, r), axis=1)
+
+
+class _Trial:
+    """Per-trial runtime bookkeeping (cheap Python; the heavy math is
+    batched outside)."""
+
+    __slots__ = ("spec", "st", "attack_name", "attack_fn", "ident_step",
+                 "events_by_step", "act_idx", "m1", "r1", "mem1")
+
+    def __init__(self, spec: TrialSpec, st: ProtocolState):
+        self.spec = spec
+        self.st = st
+        if isinstance(spec.attack, str):
+            if spec.attack not in _attack_table():
+                raise KeyError(spec.attack)   # eager, like run_protocol
+            self.attack_name = spec.attack
+            self.attack_fn = None         # resolved lazily for fallback rows
+        else:
+            self.attack_name = None
+            self.attack_fn = spec.attack
+        self.ident_step: dict[int, int] = {}
+        self.events_by_step: dict[int, list[FaultEvent]] = {}
+        for ev in spec.events:
+            self.events_by_step.setdefault(ev.step, []).append(ev)
+
+
+class _TamperStreams:
+    """Pre-drawn Byzantine tamper streams for the whole batch.
+
+    run_protocol draws one uniform per (phase, active Byzantine worker),
+    in ``byz`` order, from default_rng(seed + 1) — ``Generator.random(N)``
+    yields the same values as N sequential draws, so the engine holds a
+    (B, max_draws) matrix and per-trial cursors, and resolves a step's
+    phase-1 decisions for every trial with a couple of vectorized
+    compares.  Phase-2 (reactive identification) stays per-trial.
+    """
+
+    def __init__(self, specs, trials):
+        B = len(specs)
+        self.p = np.array([s.p_tamper for s in specs])
+        self.onset = np.array([s.onset for s in specs])
+        max_draws = max((2 * s.steps * len(s.byz) for s in specs), default=0)
+        self.u = np.zeros((B, max(1, max_draws)))
+        for b, s in enumerate(specs):
+            k = 2 * s.steps * len(s.byz)
+            if k:
+                self.u[b, :k] = np.random.default_rng(s.seed + 1).random(k)
+        self.cursor = np.zeros(B, np.int64)
+        self.trials = trials
+        self.specs = specs
+        # active Byzantine workers per trial, in byz order (rebuilt on
+        # membership changes); wid[b, j] = j-th active byz worker
+        self.nb = np.zeros(B, np.int64)
+        self.wid = np.zeros((B, 1), np.int64)
+        self.refresh()
+
+    def refresh(self, only: "list[int] | None" = None):
+        """Rebuild the active-byz view for all trials, or just ``only``
+        (the trials whose membership actually changed)."""
+        if only is not None and self.wid.size:
+            for b in only:
+                lst = [w for w in self.specs[b].byz
+                       if self.trials[b].st.active[w]]
+                self.nb[b] = len(lst)
+                self.wid[b, :len(lst)] = lst
+                self.wid[b, len(lst):] = 0
+            return
+        lists = [[w for w in s.byz if self.trials[b].st.active[w]]
+                 for b, s in enumerate(self.specs)]
+        self.nb = np.fromiter((len(x) for x in lists), np.int64, len(lists))
+        width = max(1, int(self.nb.max()) if len(lists) else 1)
+        self.wid = np.zeros((len(lists), width), np.int64)
+        for b, x in enumerate(lists):
+            self.wid[b, :len(x)] = x
+
+    def phase1_hits(self, t: int, live: np.ndarray):
+        """Vectorized phase-1 decisions: (hit_b, hit_w) index arrays."""
+        elig = live & (self.nb > 0) & (t >= self.onset)
+        if not elig.any():
+            return None
+        hb, hw = [], []
+        for j in range(int(self.nb[elig].max())):
+            rows = np.flatnonzero(elig & (self.nb > j))
+            u = self.u[rows, self.cursor[rows] + j]
+            hit = rows[u < self.p[rows]]
+            if hit.size:
+                hb.append(hit)
+                hw.append(self.wid[hit, j])
+        self.cursor[elig] += self.nb[elig]
+        if not hb:
+            return None
+        return np.concatenate(hb), np.concatenate(hw)
+
+    def phase2_hits(self, b: int, t: int) -> list[int]:
+        """Per-trial phase-2 (identify pass) decisions."""
+        if t < self.onset[b] or not self.nb[b]:
+            return []
+        k = int(self.nb[b])
+        u = self.u[b, self.cursor[b]: self.cursor[b] + k]
+        self.cursor[b] += k
+        return [int(w) for w, ui in zip(self.wid[b, :k], u)
+                if ui < self.p[b]]
+
+
+_VEC_ATTACK_ORDER = list(_VEC_ATTACKS)
+
+
+def attack_codes(trials) -> np.ndarray:
+    """(B,) int codes: index into _VEC_ATTACK_ORDER, -1 = per-row
+    fallback ("noise", custom callables)."""
+    return np.array([
+        _VEC_ATTACK_ORDER.index(t.attack_name)
+        if t.attack_name in _VEC_ATTACKS else -1
+        for t in trials
+    ])
+
+
+def _apply_attacks(grads: np.ndarray, hit_b: np.ndarray, hit_w: np.ndarray,
+                   trials, codes: np.ndarray) -> None:
+    """Apply attacks for tamper hits in place — vectorized per attack
+    kind, per-row for non-vectorizable attacks ("noise", callables)."""
+    hc = codes[hit_b]
+    for c in np.unique(hc):
+        sel = hc == c
+        bi, wi = hit_b[sel], hit_w[sel]
+        if c >= 0:
+            grads[bi, wi] = _VEC_ATTACKS[_VEC_ATTACK_ORDER[c]](grads[bi, wi])
+        else:
+            for b, w in zip(bi, wi):
+                tr = trials[b]
+                fn = tr.attack_fn or _attack_table()[tr.attack_name]
+                grads[b, w] = fn(grads[b, w])
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Results of one engine pass, in spec order."""
+
+    specs: list[TrialSpec]
+    results: list                # list[SimResult]
+    elapsed_s: float = 0.0
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __len__(self):
+        return len(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
+
+    def by_label(self) -> dict:
+        return {s.label or str(i): r
+                for i, (s, r) in enumerate(zip(self.specs, self.results))}
+
+    def summarize(self, key=lambda s: s.label.rsplit("/", 1)[0]) -> list[dict]:
+        """Aggregate trials sharing ``key(spec)`` (default: label minus
+        the trailing /sN seed suffix) into mean error/efficiency/kappa
+        rows — the shape of the paper's comparison tables."""
+        groups: dict[str, list] = {}
+        for s, r in zip(self.specs, self.results):
+            groups.setdefault(key(s), []).append(r)
+        rows = []
+        for name, rs in groups.items():
+            rows.append({
+                "scenario": name,
+                "trials": len(rs),
+                "final_error": float(np.mean([r.final_error for r in rs])),
+                "efficiency": float(np.mean([r.efficiency for r in rs])),
+                "identified": float(np.mean([r.state.kappa for r in rs])),
+                "exact": bool(np.mean([r.final_error for r in rs]) < 1e-3),
+            })
+        return rows
+
+
+def _q_fixed(spec: TrialSpec, f_t: int) -> float:
+    """check_probability for the pre-drawable (non-selective, non-
+    adaptive) trial classes, as a function of the residual budget."""
+    if spec.mode == "none" or f_t == 0:
+        return 0.0
+    if spec.mode == "deterministic":
+        return 1.0
+    return float(spec.q)
+
+
+def run_batch(specs: list[TrialSpec]) -> BatchResult:
+    """Run B independent protocol trials in one vectorized pass.
+
+    Rare, trial-local work (check-iteration detection, reactive votes,
+    state transitions) stays per-trial — it must replay each trial's
+    seeded RNG stream exactly.  Everything on the every-step path —
+    residuals, shard gradients, fixed-q check decisions, fast-mode
+    assignments, weight aggregation, efficiency accounting — is batched.
+    """
+    from repro.core.simulation import SimResult, make_problem
+
+    t_start = time.perf_counter()
+    specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
+    B = len(specs)
+    if B == 0:
+        return BatchResult([], [], 0.0)
+
+    # -- problems (cached by problem_seed; all trials share n_data, d) ----
+    problems: dict[int, tuple] = {}
+    for s in specs:
+        if s.problem_seed not in problems:
+            problems[s.problem_seed] = make_problem(seed=s.problem_seed)
+    shared_problem = len(problems) == 1
+    A0 = problems[specs[0].problem_seed][0]
+    n_data, d = A0.shape
+    if shared_problem:
+        _, y0, wt0 = problems[specs[0].problem_seed]
+        A_b = np.broadcast_to(A0, (B, n_data, d))
+        y_b = np.broadcast_to(y0, (B, n_data))
+        w_true = [wt0] * B
+    else:
+        A_b = np.empty((B, n_data, d))
+        y_b = np.empty((B, n_data))
+        w_true = []
+        for b, s in enumerate(specs):
+            A, y, wt = problems[s.problem_seed]
+            A_b[b], y_b[b] = A, y
+            w_true.append(wt)
+
+    # -- batched protocol state ------------------------------------------
+    cfgs = []
+    for s in specs:
+        bft_mode = "filter" if s.mode.startswith("filter") else s.mode
+        cfgs.append(BFTConfig(n=s.n, f=s.f, mode=bft_mode, q=s.q,
+                              p_assumed=s.p_tamper, selective=s.selective,
+                              seed=s.seed))
+    bstate = BatchedProtocolState(cfgs)
+    n_max = bstate.n_max
+    trials = [_Trial(s, bstate.trial(b)) for b, s in enumerate(specs)]
+    streams = _TamperStreams(specs, trials)
+    att_codes = attack_codes(trials)
+    for tr in trials:
+        tr.act_idx = np.flatnonzero(tr.st.active)
+
+    steps_arr = np.array([s.steps for s in specs])
+    T_max = int(steps_arr.max())
+    lr = np.array([s.lr for s in specs])
+    W = np.zeros((B, d))
+
+    # -- trial classes & pre-drawn decision streams ----------------------
+    # decide_rng advances once per iteration for deterministic/randomized
+    # trials; pre-draw those streams and decide fixed-q trials in one
+    # vectorized compare per step.  Adaptive (q=None) trials share the
+    # pre-drawn stream but compute q_t from the step's loss; selective
+    # trials draw (n,) vectors per step and stay on ProtocolState.
+    is_decider = np.array([s.mode in ("deterministic", "randomized")
+                           for s in specs])
+    is_selective = np.array([s.selective and bool(is_decider[b])
+                             for b, s in enumerate(specs)])
+    is_adaptive = np.array([s.q is None and s.mode == "randomized"
+                            and not is_selective[b]
+                            for b, s in enumerate(specs)])
+    is_vec = is_decider & ~is_selective & ~is_adaptive
+    u_mat = np.zeros((B, T_max))
+    for b, s in enumerate(specs):
+        if (is_vec[b] or is_adaptive[b]) and s.steps:
+            # consume the trial's own decide stream: same values as
+            # step-wise draws, and the stream is not used elsewhere for
+            # non-selective trials
+            u_mat[b, :s.steps] = bstate.trial(b).decide_rng.random(s.steps)
+    q_eff = np.array([_q_fixed(s, s.f) if is_vec[b] else 0.0
+                      for b, s in enumerate(specs)])
+    vec_idx = np.flatnonzero(is_vec)
+    adaptive_idx = np.flatnonzero(is_adaptive)
+    selective_idx = np.flatnonzero(is_selective)
+    filter_trials = np.flatnonzero(
+        [s.mode.startswith("filter") for s in specs])
+    draco_trials = [b for b, s in enumerate(specs) if s.mode == "draco"]
+    draco_mask = np.zeros(B, bool)
+    draco_mask[draco_trials] = True
+    has_byz = [b for b, s in enumerate(specs) if s.byz]
+    has_events = [b for b, s in enumerate(specs) if s.events]
+
+    # -- vectorized efficiency accounting --------------------------------
+    used_acc = np.zeros(B, np.int64)
+    comp_acc = np.zeros(B, np.int64)
+    check_acc = np.zeros(B, np.int64)
+    ident_acc = np.zeros(B, np.int64)
+    eff_hist = np.zeros((B, T_max))
+    losses_mat = np.zeros((B, T_max))
+    q_trace_mat = np.zeros((B, T_max))
+    last_q = np.zeros(B)
+
+    # residual fault budget per trial (f - kappa, floored at 0), kept as
+    # an array so the adaptive/fixed-q hot paths never touch ProtocolState
+    f_t_arr = np.array([s.f for s in specs])
+    uniform_steps = bool((steps_arr == T_max).all())
+    vec_all = bool(is_vec.all())
+
+    # fast-mode assignments change only when membership changes
+    # (identification / crash / recover) — cache them between changes
+    fast_cache = fast_assignment_batched(bstate.active)
+    n_active = bstate.active.sum(axis=1)
+    dirty_trials: list[int] = []
+
+    # finished-trial rows are never read (weights zeroed, W frozen), so
+    # the gradient buffer can stay uninitialized between steps
+    grads = np.empty((B, n_max, d))
+    resid_buf = np.empty((B, n_data, 1))
+
+    live_const = np.ones(B, bool)
+
+    for t in range(T_max):
+        if uniform_steps:
+            live, live_all = live_const, True
+        else:
+            live = steps_arr > t
+            live_all = bool(live.all())
+
+        # -- membership churn events (engine-only) ------------------------
+        for b in has_events:
+            if live[b]:
+                for ev in trials[b].events_by_step.get(t, ()):
+                    ws = np.asarray(ev.workers)
+                    if ev.kind == "crash":
+                        trials[b].st.on_crash(ws)
+                    else:
+                        trials[b].st.on_recover(ws)
+                    dirty_trials.append(b)
+
+        if dirty_trials:
+            fast_cache = fast_assignment_batched(
+                bstate.active | ~live[:, None])
+            n_active = (bstate.active & live[:, None]).sum(axis=1)
+            streams.refresh(only=dirty_trials)
+            for b in dirty_trials:
+                trials[b].act_idx = np.flatnonzero(trials[b].st.active)
+            dirty_trials = []
+
+        # -- losses (shared residual also feeds the gradients) ------------
+        resid = residuals(A_b, y_b, W, out=resid_buf)        # (B, I)
+        loss_col = losses_of(resid)                          # (B,)
+        losses_mat[:, t] = loss_col
+
+        # -- check decisions ----------------------------------------------
+        if vec_all:
+            checks = u_mat[:, t] < q_eff
+            last_q[:] = q_eff
+        else:
+            checks = np.zeros(B, bool)
+            if vec_idx.size:
+                checks[vec_idx] = u_mat[vec_idx, t] < q_eff[vec_idx]
+                last_q[vec_idx] = q_eff[vec_idx]
+            for b in adaptive_idx:
+                if live[b]:
+                    f_t = f_t_arr[b]
+                    if f_t <= 0:
+                        q_t = 0.0
+                    else:
+                        lam = adaptive.lam_from_loss(float(loss_col[b]))
+                        trials[b].st.last_lambda = lam
+                        q_t = adaptive.q_star(int(f_t), specs[b].p_tamper,
+                                              lam)
+                    last_q[b] = q_t
+                    checks[b] = u_mat[b, t] < q_t
+            for b in selective_idx:
+                if live[b]:
+                    checks[b] = trials[b].st.decide_check(float(loss_col[b]))
+                    last_q[b] = trials[b].st.last_q
+        if not live_all:
+            checks &= live
+        q_trace_mat[:, t] = last_q
+
+        # -- phase-1 assignments ------------------------------------------
+        # cached fast rows for everyone, then overwrite the RNG-permuted
+        # check / draco rows trial-by-trial (copy-on-write)
+        check_idx = np.flatnonzero(checks)
+        if check_idx.size or draco_trials:
+            batch_a = BatchedAssignment(
+                fast_cache.shard_of_worker.copy(),
+                fast_cache.group_of_worker.copy(),
+                fast_cache.weight.copy(),
+                fast_cache.num_shards.copy(),
+            )
+            for b in check_idx:
+                tr = trials[b]
+                r1 = max(1, int(f_t_arr[b])) + 1
+                m1, mem = _grouped_rows_into(batch_a, b, tr.act_idx, r1,
+                                             tr.st.rng)
+                tr.m1, tr.r1, tr.mem1 = m1, r1, mem
+            for b in draco_trials:
+                if live[b]:
+                    tr, s = trials[b], specs[b]
+                    r1 = 2 * max(1, s.f) + 1
+                    m1, mem = _grouped_rows_into(batch_a, b, tr.act_idx, r1,
+                                                 tr.st.rng)
+                    tr.m1, tr.r1, tr.mem1 = m1, r1, mem
+        else:
+            batch_a = fast_cache
+
+        is_fast = np.ones(B, bool)
+        is_fast[check_idx] = False
+        for b in draco_trials:
+            is_fast[b] = False
+
+        if live_all:
+            group_all = batch_a.group_of_worker
+        else:
+            group_all = np.where(live[:, None], batch_a.group_of_worker, -1)
+        shard_all = batch_a.shard_of_worker
+        m_all = batch_a.num_shards
+
+        # -- shard gradients: one batched matmul per distinct m -----------
+        for m in np.unique(m_all if live_all else m_all[live]):
+            m = int(m)
+            is_m = m_all == m
+            if not live_all:
+                is_m &= live
+            sub = np.flatnonzero(is_m)
+            rows = n_data // m
+            if shared_problem:
+                Ar = A0[: m * rows].reshape(1, m, rows, d)
+            else:
+                Ar = A_b[sub, : m * rows].reshape(len(sub), m, rows, d)
+            rr = resid[sub, : m * rows].reshape(len(sub), m, 1, rows)
+            sg = shard_gradients(Ar, rr, rows)               # (S, m, d)
+            if m == n_max and (group_all[sub] >= 0).all():
+                # fast mode, nobody eliminated: worker w owns shard w —
+                # the gather is the identity, skip it
+                if sub.size == B:
+                    grads = sg
+                else:
+                    grads[sub] = sg
+            else:
+                grads[sub] = worker_gradients(sg, shard_all[sub],
+                                              group_all[sub])
+
+        # -- Byzantine tampering (phase 1) --------------------------------
+        if has_byz:
+            hits = streams.phase1_hits(t, live)
+            if hits is not None:
+                _apply_attacks(grads, hits[0], hits[1], trials, att_codes)
+
+        # -- verdicts ------------------------------------------------------
+        # fast-path counters vectorized; check/draco/filter per trial
+        fast_live = is_fast if live_all else (is_fast & live)
+        used_t = np.where(fast_live, m_all, 0)
+        comp_t = np.where(fast_live, n_active, 0)
+        identified_t = np.zeros(B, bool)
+        agg_weight = np.where(fast_live[:, None], batch_a.weight,
+                              np.float32(0.0))
+        voted: dict[int, np.ndarray] = {}
+
+        for b in draco_trials:
+            if not live[b]:
+                continue
+            tr = trials[b]
+            votes = []
+            for g in tr.mem1:
+                val, faulty, _ = majority_vote_np(grads[b][g], tau=1e-9)
+                votes.append(val)
+                for w_id in g[faulty]:
+                    tr.ident_step.setdefault(int(w_id), t)
+            # mean of a single vote is the vote (bitwise): skip the stack
+            voted[b] = votes[0] if len(votes) == 1 else np.mean(votes,
+                                                               axis=0)
+            used_t[b] = tr.m1
+            comp_t[b] = tr.m1 * tr.r1
+
+        for b in check_idx:
+            tr, st, s = trials[b], trials[b].st, specs[b]
+            used_t[b] = tr.m1
+            comp_t[b] = tr.m1 * tr.r1
+            gm = grads[b][tr.mem1]               # (m, r, d) replica groups
+            if np.abs(gm - gm[:, :1]).max() > 1e-9:
+                identified_t[b] = True
+                ai, mem_i = _grouped_rows(s.n, tr.act_idx,
+                                          2 * max(1, int(f_t_arr[b])) + 1,
+                                          st.rng)
+                rows = n_data // ai.num_shards
+                Ar = (A0 if shared_problem else A_b[b])[: ai.num_shards *
+                                                        rows]
+                Ar = Ar.reshape(1, ai.num_shards, rows, d)
+                rr = resid[b, : ai.num_shards * rows].reshape(
+                    1, ai.num_shards, 1, rows)
+                sg = shard_gradients(Ar, rr, rows)
+                g2 = worker_gradients(sg, ai.shard_of_worker[None],
+                                      ai.group_of_worker[None])[0]
+                tam = streams.phase2_hits(b, t)
+                if tam:
+                    _apply_attacks(g2[None], np.zeros(len(tam), np.int64),
+                                   np.asarray(tam), [tr], att_codes[b:b + 1])
+                used_t[b] += ai.num_shards
+                comp_t[b] += ai.num_shards * ai.replication
+                votes, newly = [], set()
+                for g in mem_i:
+                    val, faulty, _ = majority_vote_np(g2[g], tau=1e-9)
+                    votes.append(val)
+                    newly |= {int(x) for x in g[faulty]}
+                if newly:
+                    st.on_identified(np.asarray(sorted(newly)))
+                    for w_id in newly:
+                        tr.ident_step[w_id] = t
+                    f_t_arr[b] = max(0, s.f - st.kappa)
+                    dirty_trials.append(b)
+                    if is_vec[b]:
+                        q_eff[b] = _q_fixed(s, int(f_t_arr[b]))
+                voted[b] = (votes[0] if len(votes) == 1
+                            else np.mean(votes, axis=0))
+                agg_weight[b] = 0.0
+            else:
+                st.on_clean_check(tr.mem1.ravel())
+                agg_weight[b] = batch_a.weight[b]
+
+        for b in filter_trials:
+            if not live[b]:
+                continue
+            st, s = trials[b].st, specs[b]
+            name = (s.mode.split(":", 1)[1] if ":" in s.mode
+                    else s.filter_name)
+            import jax.numpy as jnp
+
+            act = np.flatnonzero(st.active)
+            voted[b] = np.asarray(filters_mod.FILTERS[name](
+                jnp.asarray(grads[b][act]), max(1, s.f)))
+            agg_weight[b] = 0.0
+
+        # -- accounting + update ------------------------------------------
+        used_acc += used_t
+        comp_acc += comp_t
+        check_acc += (checks | draco_mask) & live
+        ident_acc += identified_t
+        eff_hist[:, t] = used_t / np.maximum(1, comp_t)
+
+        grad_upd = aggregate(agg_weight, grads)
+        for b, v in voted.items():
+            grad_upd[b] = v
+        W = np.where(live[:, None], W - lr[:, None] * grad_upd, W)
+
+    # -- materialize per-trial results ------------------------------------
+    results = []
+    for b, s in enumerate(specs):
+        tr, st = trials[b], trials[b].st
+        st.step = s.steps
+        meter = st.meter
+        meter.used = int(used_acc[b])
+        meter.computed = int(comp_acc[b])
+        meter.iterations = s.steps
+        meter.check_iterations = int(check_acc[b])
+        meter.identify_iterations = int(ident_acc[b])
+        meter.history = eff_hist[b, :s.steps].tolist()
+        st.last_q = float(q_trace_mat[b, s.steps - 1]) if s.steps else 0.0
+        results.append(SimResult(
+            w=W[b].copy(),
+            w_true=w_true[b],
+            state=st,
+            losses=losses_mat[b, :s.steps].tolist(),
+            q_trace=q_trace_mat[b, :s.steps].tolist(),
+            identify_step=tr.ident_step,
+        ))
+    return BatchResult(specs, results, time.perf_counter() - t_start)
+
+
+# ---------------------------------------------------------------------------
+# Declarative scenario matrices
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPattern:
+    """Who misbehaves and how membership churns."""
+
+    name: str
+    byz: tuple[int, ...] = ()
+    onset: int = 0
+    events: tuple[FaultEvent, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeSpec:
+    """A named protocol/baseline configuration."""
+
+    name: str
+    mode: str = "randomized"
+    q: float | None = None
+    selective: bool = False
+    filter_name: str = "median"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioMatrix:
+    """Named grid of attacks x modes x fault patterns x seeds.
+
+    ``expand()`` produces one ``TrialSpec`` per cell, labelled
+    ``mode/attack/fault/sSEED`` so ``BatchResult.summarize()`` can
+    aggregate over seeds.  See docs/scenarios.md.
+    """
+
+    name: str
+    modes: tuple[ModeSpec, ...]
+    attacks: tuple[str, ...] = ("sign_flip",)
+    faults: tuple[FaultPattern, ...] = (FaultPattern("byz25", (2, 5)),)
+    seeds: tuple[int, ...] = (0,)
+    n: int = 8
+    f: int = 2
+    steps: int = 300
+    p_tamper: float = 0.8
+    lr: float = 0.05
+    problem_seed: int = 0
+
+    def expand(self) -> list[TrialSpec]:
+        out = []
+        for mo, at, fp, sd in itertools.product(
+            self.modes, self.attacks, self.faults, self.seeds
+        ):
+            out.append(TrialSpec(
+                n=self.n, f=self.f, byz=fp.byz, attack=at,
+                p_tamper=self.p_tamper, steps=self.steps, q=mo.q,
+                mode=mo.mode, filter_name=mo.filter_name,
+                selective=mo.selective, lr=self.lr, seed=sd,
+                problem_seed=self.problem_seed, onset=fp.onset,
+                events=fp.events,
+                label=f"{mo.name}/{at}/{fp.name}/s{sd}",
+            ))
+        return out
+
+    def run(self) -> BatchResult:
+        return run_batch(self.expand())
+
+
+_RAND = ModeSpec("randomized_q0.2", "randomized", q=0.2)
+
+SCENARIOS: dict[str, ScenarioMatrix] = {
+    # the paper's core comparison table (§2/§3): every scheme vs the same
+    # sign-flip adversary — exactness, efficiency, identification
+    "paper_core": ScenarioMatrix(
+        name="paper_core",
+        modes=(
+            ModeSpec("none", "none"),
+            ModeSpec("filter_median", "filter:median"),
+            ModeSpec("filter_krum", "filter:krum"),
+            ModeSpec("draco", "draco"),
+            ModeSpec("deterministic", "deterministic"),
+            _RAND,
+            ModeSpec("adaptive", "randomized", q=None),
+        ),
+        seeds=(0, 1, 2),
+    ),
+    # every attack in the table vs the randomized scheme
+    "attack_sweep": ScenarioMatrix(
+        name="attack_sweep",
+        modes=(_RAND, ModeSpec("adaptive", "randomized", q=None)),
+        attacks=("sign_flip", "scale", "drift", "zero"),
+        seeds=(0, 1),
+    ),
+    # late-onset Byzantine behavior: workers turn after a clean prefix —
+    # the randomized schedule must still identify them (§4.2 holds from
+    # the onset step on)
+    "late_onset": ScenarioMatrix(
+        name="late_onset",
+        modes=(ModeSpec("randomized_q0.3", "randomized", q=0.3),),
+        attacks=("sign_flip", "drift"),
+        faults=(
+            FaultPattern("onset50", (2, 5), onset=50),
+            FaultPattern("onset150", (4,), onset=150),
+        ),
+        seeds=(0, 1, 2),
+    ),
+    # elastic membership churn: crash mid-run, recover later
+    # (ProtocolState.on_crash / on_recover)
+    "elastic_churn": ScenarioMatrix(
+        name="elastic_churn",
+        modes=(ModeSpec("randomized_q0.3", "randomized", q=0.3),),
+        attacks=("none", "sign_flip"),
+        faults=(
+            FaultPattern(
+                "crash17_recover1",
+                byz=(5,),
+                events=(
+                    FaultEvent(60, "crash", (1, 7)),
+                    FaultEvent(140, "recover", (1,)),
+                ),
+            ),
+        ),
+        seeds=(0, 1),
+    ),
+    # §5 selective checks: reliability-weighted per-worker probabilities
+    "selective": ScenarioMatrix(
+        name="selective",
+        modes=(
+            ModeSpec("uniform_q0.3", "randomized", q=0.3),
+            ModeSpec("selective_q0.3", "randomized", q=0.3, selective=True),
+        ),
+        attacks=("scale",),
+        faults=(FaultPattern("byz6", (6,)),),
+        seeds=(0, 1, 2),
+    ),
+}

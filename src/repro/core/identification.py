@@ -15,8 +15,32 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFAULT_TAU = 1e-5
+
+
+def majority_vote_np(replicas: np.ndarray, tau: float = DEFAULT_TAU):
+    """Host-side numpy mirror of ``majority_vote`` for the protocol
+    simulators (no device dispatch — the convex testbed votes thousands
+    of times per sweep and the ~ms-per-call eager-jax overhead dominates
+    everything else).
+
+    Casts to float32 first so verdicts and voted values match the jnp
+    path bit-for-bit (same IEEE elementwise ops, same first-majority
+    winner).  Returns (value (d,) float32, faulty (r,) bool, ok bool).
+    """
+    reps = np.asarray(replicas, np.float32)
+    a, b = reps[:, None], reps[None, :]
+    scale = 1.0 + np.minimum(np.abs(a), np.abs(b))
+    agree = (np.abs(a - b) <= tau * scale).all(axis=-1)        # (r, r)
+    r = reps.shape[0]
+    counts = agree.sum(axis=1)
+    is_major = counts > (r // 2)
+    has_majority = bool(is_major.any())
+    winner = int(np.argmax(is_major))
+    faulty = ~agree[winner] & has_majority
+    return reps[winner], faulty, has_majority
 
 
 def pairwise_agreement(replicas: jnp.ndarray, tau: float = DEFAULT_TAU):

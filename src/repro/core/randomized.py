@@ -1,9 +1,14 @@
 """Randomized reactive-redundancy protocol state (paper §4.2, §4.3, §5).
 
 Host-side state machine driving the three compiled steps (fast / check /
-identify).  All randomness flows from one seeded generator so a restarted
-run replays the identical check schedule (fault-tolerance requirement:
-checkpoint + restart must be bit-deterministic).
+identify).  All randomness flows from two seeded generators — ``rng``
+(replica-group permutations) and ``decide_rng`` (check-iteration coin
+flips) — so a restarted run replays the identical check schedule
+(fault-tolerance requirement: checkpoint + restart must be
+bit-deterministic).  The streams are split so the batched scenario
+engine (repro.core.engine) can pre-draw a trial's whole decision
+sequence in one vectorized call: ``decide_rng`` advances exactly once
+per decide_check call, never interleaved with permutation draws.
 
 Per iteration t:
   1. q_t  = fixed q, or the closed-form adaptive q*(f_t, p, λ(ℓ_t)) (§4.3);
@@ -36,6 +41,14 @@ from repro.core.efficiency import EfficiencyMeter
 Mode = Literal["randomized", "deterministic", "draco", "filter", "none"]
 
 
+def decide_generator(seed: int) -> np.random.Generator:
+    """The decide-stream generator for a protocol seed.  One fixed
+    derivation shared by ProtocolState.create and the scenario engine
+    (which pre-draws the stream as a block — Generator.random(T) yields
+    the same values as T sequential .random() calls)."""
+    return np.random.default_rng(np.random.SeedSequence([int(seed), 0x0DEC1DE]))
+
+
 @dataclasses.dataclass
 class BFTConfig:
     n: int                       # workers (data-axis size)
@@ -61,7 +74,8 @@ class ProtocolState:
     crashed: np.ndarray           # (n,) bool — failed nodes (elastic path)
     alpha: np.ndarray             # (n,) float — reliability: fault events + prior
     beta: np.ndarray              # (n,) float — reliability: clean checks + prior
-    rng: np.random.Generator
+    rng: np.random.Generator      # replica-group permutations
+    decide_rng: np.random.Generator  # check-iteration coin flips
     step: int = 0
     meter: EfficiencyMeter = dataclasses.field(default_factory=EfficiencyMeter)
     last_q: float = 0.0
@@ -79,6 +93,7 @@ class ProtocolState:
             alpha=np.full(n, 0.5),
             beta=np.full(n, 0.5),
             rng=np.random.default_rng(cfg.seed),
+            decide_rng=decide_generator(cfg.seed),
         )
 
     # -- derived --------------------------------------------------------
@@ -120,8 +135,8 @@ class ProtocolState:
             act = self.active
             total = max(rate[act].sum(), 1e-9)
             q_i = np.clip(q * rate / total, 0.0, 1.0) * act
-            return bool((self.rng.random(self.cfg.n) < q_i).any())
-        return bool(self.rng.random() < q)
+            return bool((self.decide_rng.random(self.cfg.n) < q_i).any())
+        return bool(self.decide_rng.random() < q)
 
     # -- assignments ------------------------------------------------------
     # Group membership is permuted by the protocol RNG on every draw —
@@ -168,6 +183,7 @@ class ProtocolState:
             "alpha": self.alpha.copy(),
             "beta": self.beta.copy(),
             "rng_state": self.rng.bit_generator.state,
+            "decide_rng_state": self.decide_rng.bit_generator.state,
             "step": self.step,
             "meter": self.meter.state_dict(),
         }
@@ -179,5 +195,7 @@ class ProtocolState:
         self.alpha = np.asarray(d["alpha"]).copy()
         self.beta = np.asarray(d["beta"]).copy()
         self.rng.bit_generator.state = d["rng_state"]
+        if "decide_rng_state" in d:       # absent in pre-split checkpoints
+            self.decide_rng.bit_generator.state = d["decide_rng_state"]
         self.step = int(d["step"])
         self.meter.load_state_dict(d["meter"])

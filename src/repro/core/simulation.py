@@ -8,6 +8,12 @@ plumbing) can be swept over thousands of configurations quickly.  The SPMD
 version of the same protocol is repro.train (validated in
 tests/test_bft_integration.py); both share assignment / detection /
 identification code.
+
+``run_protocol`` here is the SERIAL REFERENCE: one trial, one Python
+loop.  Wide sweeps (seeds × attacks × modes × fault patterns) go through
+the batched scenario engine, repro.core.engine.run_batch, which
+reproduces this function bitwise for matching configs — both paths share
+the einsum gradient primitives (see tests/test_engine_parity.py).
 """
 from __future__ import annotations
 
@@ -18,12 +24,18 @@ import numpy as np
 
 from repro.core import filters as filters_mod
 from repro.core.assignment import (
-    check_assignment,
-    fast_assignment,
+    Assignment,
     group_members,
     identify_assignment,
-    shard_batch_indices,
 )
+from repro.core.engine import (
+    aggregate,
+    losses_of,
+    residuals,
+    shard_gradients,
+    worker_gradients,
+)
+from repro.core.identification import majority_vote_np
 from repro.core.randomized import BFTConfig, ProtocolState
 
 Attack = Callable[[np.ndarray], np.ndarray]
@@ -43,11 +55,6 @@ def make_problem(n_data=256, d=8, seed=0):
     A = rng.normal(size=(n_data, d))
     w_true = rng.normal(size=d)
     return A, A @ w_true, w_true
-
-
-def worker_grad(A, y, rows, w):
-    Ar, yr = A[rows], y[rows]
-    return 2 * Ar.T @ (Ar @ w - yr) / len(rows)
 
 
 @dataclasses.dataclass
@@ -87,6 +94,7 @@ def run_protocol(
     if isinstance(attack, str):
         attack = ATTACKS[attack]
     A, y, w_true = make_problem(seed=problem_seed)
+    A1, y1 = A[None], y[None]            # length-1 batch for the primitives
     bft_mode = "filter" if mode.startswith("filter") else mode
     bft = BFTConfig(n=n, f=f, mode=bft_mode, q=q, p_assumed=p_tamper,
                     selective=selective, seed=seed)
@@ -96,17 +104,25 @@ def run_protocol(
     losses, q_trace = [], []
     ident_step: dict[int, int] = {}
 
-    def tampered(rows_w, base_w):
-        grads = np.stack(
-            [worker_grad(A, y, rows_w[i], base_w) for i in range(n)]
-        )
+    def tampered(a: Assignment, resid: np.ndarray) -> np.ndarray:
+        """All n worker gradients for assignment ``a`` (the B=1 case of
+        the engine's batched shard-gradient matmul), then the Byzantine
+        attack."""
+        m = a.num_shards
+        rows = len(A) // m
+        Ar = A[: m * rows].reshape(1, m, rows, A.shape[1])
+        rr = resid[:, : m * rows].reshape(1, m, 1, rows)
+        sg = shard_gradients(Ar, rr, rows)                 # (1, m, d)
+        grads = worker_gradients(sg, a.shard_of_worker[None],
+                                 a.group_of_worker[None])[0]
         for b in byz:
             if st.active[b] and rng.random() < p_tamper:
                 grads[b] = attack(grads[b])
         return grads
 
     for t in range(steps):
-        loss = float(np.mean((A @ w - y) ** 2))
+        resid = residuals(A1, y1, w[None])                 # (1, n_data)
+        loss = float(losses_of(resid)[0])
         losses.append(loss)
         used = computed = 0
         checked = identified = False
@@ -116,14 +132,11 @@ def run_protocol(
             # every iteration — efficiency pinned at 1/(2f+1), no reactive
             # phase, no elimination (the paper's comparison point).
             a = identify_assignment(st.active, max(1, f), st.rng)
-            rows = shard_batch_indices(a, len(A))
-            grads = tampered(rows, w)
-            from repro.core.identification import majority_vote
-
+            grads = tampered(a, resid)
             votes = []
             for g in group_members(a):
-                val, faulty, _ = majority_vote(np.asarray(grads[g]), tau=1e-9)
-                votes.append(np.asarray(val))
+                val, faulty, _ = majority_vote_np(grads[g], tau=1e-9)
+                votes.append(val)
                 for b in np.asarray(g)[np.asarray(faulty)]:
                     ident_step.setdefault(int(b), t)
             grad = np.mean(votes, axis=0)
@@ -132,8 +145,7 @@ def run_protocol(
         elif mode in ("deterministic", "randomized") and st.decide_check(loss):
             checked = True
             a = st.assignment_check()
-            rows = shard_batch_indices(a, len(A))
-            grads = tampered(rows, w)
+            grads = tampered(a, resid)
             used, computed = a.num_shards, a.gradients_computed()
             fault = any(
                 np.abs(grads[g] - grads[g[0]]).max() > 1e-9
@@ -142,18 +154,13 @@ def run_protocol(
             if fault:
                 identified = True
                 ai = st.assignment_identify()
-                rows_i = shard_batch_indices(ai, len(A))
-                grads_i = tampered(rows_i, w)
+                grads_i = tampered(ai, resid)
                 used += ai.num_shards
                 computed += ai.gradients_computed()
-                from repro.core.identification import majority_vote
-
                 votes, newly = [], set()
                 for g in group_members(ai):
-                    val, faulty, ok = majority_vote(
-                        np.asarray(grads_i[g]), tau=1e-9
-                    )
-                    votes.append(np.asarray(val))
+                    val, faulty, ok = majority_vote_np(grads_i[g], tau=1e-9)
+                    votes.append(val)
                     newly |= {int(x) for x in np.asarray(g)[np.asarray(faulty)]}
                 if newly:
                     st.on_identified(np.asarray(sorted(newly)))
@@ -162,11 +169,10 @@ def run_protocol(
                 grad = np.mean(votes, axis=0)
             else:
                 st.on_clean_check(np.flatnonzero(a.group_of_worker >= 0))
-                grad = np.tensordot(a.weight, grads, axes=1)
+                grad = aggregate(a.weight[None], grads[None])[0]
         else:
             a = st.assignment_fast()
-            rows = shard_batch_indices(a, len(A))
-            grads = tampered(rows, w)
+            grads = tampered(a, resid)
             used, computed = a.num_shards, a.gradients_computed()
             if mode.startswith("filter"):
                 name = mode.split(":", 1)[1] if ":" in mode else filter_name
@@ -178,10 +184,13 @@ def run_protocol(
                     )
                 )
             else:
-                grad = np.tensordot(a.weight, grads, axes=1)
+                grad = aggregate(a.weight[None], grads[None])[0]
 
         st.meter.record(used, computed, checked=checked, identified=identified)
         q_trace.append(st.last_q)
-        w = w - lr * grad
+        # float64 update regardless of grad provenance (votes and filters
+        # come back float32 from jax) — keeps the serial reference bitwise
+        # aligned with the engine's float64 batched update
+        w = w - lr * np.asarray(grad, dtype=np.float64)
         st.step += 1
     return SimResult(w, w_true, st, losses, q_trace, ident_step)

@@ -1,0 +1,131 @@
+"""Paper-claim assertions over declarative scenario matrices.
+
+Each test expands a ScenarioMatrix (attacks x modes x fault patterns x
+seeds) into one engine batch and asserts the paper's qualitative claims
+across the whole grid — the sweeps that are too slow to run through the
+serial run_protocol loop one cell at a time.
+
+Engine-only scenario features (late Byzantine onset, crash/recover
+churn) are covered here too: they have no serial equivalent.
+"""
+import numpy as np
+import pytest
+
+from repro.core import adaptive
+from repro.core.engine import (
+    SCENARIOS,
+    FaultEvent,
+    FaultPattern,
+    ModeSpec,
+    ScenarioMatrix,
+    TrialSpec,
+    run_batch,
+)
+
+
+def test_paper_core_matrix_reproduces_comparison_table():
+    """The paper's core table (§2/§3): exactness, efficiency ordering,
+    identification — every scheme vs the same sign-flip adversary."""
+    res = SCENARIOS["paper_core"].run()
+    rows = {r["scenario"].split("/", 1)[0]: r for r in res.summarize()}
+
+    # exact fault-tolerance (Definition 1): reactive schemes + DRACO
+    for scheme in ("draco", "deterministic", "randomized_q0.2", "adaptive"):
+        assert rows[scheme]["exact"], scheme
+    # no protection diverges under the attack.  (The filters happen to
+    # converge on this noiseless convex testbed — every honest gradient
+    # vanishes at w* — so the paper's distinction filters vs coding
+    # shows up in the identification guarantee asserted below, not in
+    # this problem's final error.)
+    assert not rows["none"]["exact"]
+
+    # efficiency: randomized >> deterministic > draco = 1/(2f+1)
+    assert abs(rows["draco"]["efficiency"] - 1 / 5) < 1e-9
+    assert rows["deterministic"]["efficiency"] > rows["draco"]["efficiency"]
+    assert rows["randomized_q0.2"]["efficiency"] > 0.8
+
+    # reactive schemes identify the true Byzantine set; filters never do
+    for scheme in ("deterministic", "randomized_q0.2", "adaptive"):
+        assert rows[scheme]["identified"] == 2.0, scheme
+    assert rows["filter_median"]["identified"] == 0.0
+
+
+def test_attack_sweep_exact_under_every_attack():
+    res = SCENARIOS["attack_sweep"].run()
+    for spec, r in zip(res.specs, res.results):
+        assert r.final_error < 1e-3, spec.label
+        assert set(np.flatnonzero(r.state.identified)) == {2, 5}, spec.label
+
+
+def test_late_onset_byzantine_still_identified():
+    """§4.2 holds from the onset step: a worker that turns Byzantine at
+    step t0 is identified after t0, never before."""
+    res = SCENARIOS["late_onset"].run()
+    for spec, r in zip(res.specs, res.results):
+        for w in spec.byz:
+            assert r.state.identified[w], spec.label
+            assert r.identify_step[w] >= spec.onset, spec.label
+        assert r.final_error < 1e-3, spec.label
+
+
+def test_elastic_churn_crash_recover():
+    """Crash shrinks the active set, recovery restores it (identified
+    workers stay out), and the run converges through the churn."""
+    res = SCENARIOS["elastic_churn"].run()
+    for spec, r in zip(res.specs, res.results):
+        active = r.state.active
+        assert not r.state.crashed.any() or not active[7], spec.label
+        assert not active[7]           # crashed at 60, never recovered
+        assert active[1]               # recovered at 140
+        assert np.isfinite(r.losses[-1]), spec.label
+        if "sign_flip" in spec.label:
+            assert r.state.identified[5], spec.label
+
+
+def test_selective_checks_match_uniform_cost_and_exactness():
+    """§5: reliability-weighted per-worker checks keep exactness; the
+    aggregate check rate (and so efficiency) stays in the same regime."""
+    res = SCENARIOS["selective"].run()
+    rows = {r["scenario"].split("/", 1)[0]: r for r in res.summarize()}
+    assert rows["uniform_q0.3"]["exact"]
+    assert rows["selective_q0.3"]["exact"]
+    assert rows["selective_q0.3"]["identified"] == 1.0
+    assert abs(rows["selective_q0.3"]["efficiency"]
+               - rows["uniform_q0.3"]["efficiency"]) < 0.15
+
+
+def test_mixed_attacks_in_one_batch():
+    """Trials with different attacks/modes/n coexist in one batch."""
+    specs = [
+        TrialSpec(byz=(2,), attack="scale", q=0.3, steps=150, seed=0),
+        TrialSpec(byz=(1,), attack="drift", q=0.3, steps=150, seed=1,
+                  n=6, f=1),
+        TrialSpec(byz=(3,), attack="zero", q=None, steps=150, seed=2),
+    ]
+    res = run_batch(specs)
+    for spec, r in zip(specs, res):
+        assert r.final_error < 1e-3
+        assert set(np.flatnonzero(r.state.identified)) == set(spec.byz)
+
+
+def test_efficiency_stays_above_eq2_bound_across_q_grid():
+    """eq. 2: measured efficiency sits on/above 1 - q*2f/(2f+1) for every
+    q — elimination pushes it above once the Byzantine set is caught."""
+    matrix = ScenarioMatrix(
+        name="eq2",
+        modes=tuple(ModeSpec(f"q{q}", "randomized", q=q)
+                    for q in (0.05, 0.2, 0.5, 0.8)),
+        attacks=("sign_flip",),
+        faults=(FaultPattern("byz25", (2, 5)),),
+        seeds=(0, 1, 2),
+        steps=150,
+    )
+    res = matrix.run()
+    for row in res.summarize():
+        q = float(row["scenario"].split("/")[0][1:])
+        assert row["efficiency"] >= adaptive.com_eff(q, 2) - 1e-9, row
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(3, "explode", (1,))

@@ -2,6 +2,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # degrade gracefully when not installed
 from hypothesis import given, settings, strategies as st
 
 from repro.core import adaptive

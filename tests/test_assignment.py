@@ -1,6 +1,7 @@
 """Replica-group assignment properties (paper §4.1)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade gracefully when not installed
 from hypothesis import given, settings, strategies as st
 
 from repro.core import assignment as A

@@ -1,0 +1,105 @@
+"""Batched scenario engine == serial reference, bitwise.
+
+The engine's exactness contract (repro.core.engine): for any TrialSpec
+whose fields match run_protocol's keyword arguments, run_batch must
+reproduce run_protocol's final_error, efficiency and identify_step
+EXACTLY — not approximately — for the same seeds, with the trial run
+inside an arbitrary mixed batch.  This is what makes wide sweeps
+trustworthy: a scenario cell can be debugged by re-running its single
+trial serially and getting the identical trajectory.
+
+Both paths share the matmul primitives in repro.core.engine, and every
+batched contraction keeps the per-item operand shapes of the serial
+path, so the floating-point streams agree bit-for-bit.  These tests run
+ALL configs below in ONE batch (also proving cross-trial isolation)
+and compare against fresh serial runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import TrialSpec, run_batch
+from repro.core.simulation import run_protocol
+
+# one config per protocol mode / decision class, plus n/f and problem
+# variations — all batched together
+PARITY_CONFIGS = [
+    dict(byz=(2, 5), attack="sign_flip", steps=120, q=0.4,
+         mode="randomized", seed=1),
+    dict(byz=(2, 5), attack="sign_flip", steps=120, q=None,
+         mode="randomized", seed=3),                      # adaptive q* (§4.3)
+    dict(byz=(1,), attack="drift", steps=100, mode="deterministic",
+         q=None, seed=2),
+    # draco runs long enough to reach the converged noise floor, where
+    # replica order inside the vote matters (regression: engine must
+    # feed replicas in sorted-id order, like the serial path)
+    dict(byz=(3,), attack="scale", steps=300, mode="draco", q=None, seed=0),
+    dict(byz=(2, 5), attack="sign_flip", steps=100, mode="filter:median",
+         q=0.4, seed=5),
+    dict(byz=(6,), attack="scale", steps=120, q=0.3, selective=True,
+         seed=7),                                         # §5 selective
+    dict(byz=(), attack="none", steps=100, q=0.4, seed=4),
+    dict(byz=(2,), attack="zero", steps=100, q=0.2, seed=9, n=6, f=1),
+    dict(byz=(4,), attack="noise", steps=90, q=0.3, seed=12),
+    dict(byz=(2, 5), attack="drift", steps=100, q=0.5, seed=13,
+         problem_seed=3),
+    dict(byz=(2, 5), attack="sign_flip", steps=400, q=0.4, seed=1),
+]
+
+_batch = None
+
+
+def _get_batch():
+    global _batch
+    if _batch is None:
+        _batch = run_batch([TrialSpec(**c) for c in PARITY_CONFIGS])
+    return _batch
+
+
+@pytest.mark.parametrize("idx", range(len(PARITY_CONFIGS)),
+                         ids=[f"{c.get('mode', 'randomized')}-s{c['seed']}"
+                              for c in PARITY_CONFIGS])
+def test_batched_engine_reproduces_run_protocol_exactly(idx):
+    cfg = PARITY_CONFIGS[idx]
+    batched = _get_batch()[idx]
+    serial = run_protocol(**cfg)
+
+    # the headline contract: exact equality, not tolerance
+    assert serial.final_error == batched.final_error
+    assert serial.efficiency == batched.efficiency
+    assert serial.identify_step == batched.identify_step
+    # and the full trajectories behind them
+    assert serial.losses == batched.losses
+    assert serial.q_trace == batched.q_trace
+    assert np.array_equal(serial.w, batched.w)
+    assert np.array_equal(serial.state.active, batched.state.active)
+    assert np.array_equal(serial.state.identified, batched.state.identified)
+
+
+def test_meter_counters_match_exactly():
+    for cfg, batched in zip(PARITY_CONFIGS, _get_batch()):
+        serial = run_protocol(**cfg)
+        sm, bm = serial.state.meter, batched.state.meter
+        assert (sm.used, sm.computed, sm.iterations, sm.check_iterations,
+                sm.identify_iterations) == (
+            bm.used, bm.computed, bm.iterations, bm.check_iterations,
+            bm.identify_iterations)
+        assert sm.history == bm.history
+
+
+def test_batch_order_does_not_change_results():
+    """Trials are independent: reversing the batch permutes nothing."""
+    specs = [TrialSpec(**c) for c in PARITY_CONFIGS[:4]]
+    fwd = run_batch(specs)
+    rev = run_batch(specs[::-1])
+    for i, r in enumerate(fwd):
+        r2 = rev[len(specs) - 1 - i]
+        assert r.final_error == r2.final_error
+        assert r.losses == r2.losses
+
+
+def test_single_trial_batch_matches_serial():
+    cfg = dict(byz=(2, 5), attack="sign_flip", steps=150, q=0.3, seed=21)
+    b = run_batch([TrialSpec(**cfg)])[0]
+    s = run_protocol(**cfg)
+    assert s.final_error == b.final_error
+    assert s.losses == b.losses

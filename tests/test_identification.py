@@ -4,6 +4,9 @@ exposes exactly the tampered replicas."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # degrade gracefully when not installed
 from hypothesis import given, settings, strategies as st
 
 from repro.core.identification import majority_vote, vote_tree

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade gracefully when not installed
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import latest_step, restore, save
