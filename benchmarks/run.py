@@ -2,12 +2,61 @@
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = 0.0 for analytic /
 counting benchmarks where wall time is not the measurand).  JSON artifacts
-land in results/bench/.
+land in results/bench/; the engine's perf trajectory (serial -> numpy
+engine -> jitted jax backend) is additionally written to
+``BENCH_engine.json`` at the repo root so speedups are trackable across
+PRs without digging through per-run artifacts.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_engine() -> None:
+    """Summarize the engine benchmarks into BENCH_engine.json (repo root).
+
+    Tracked fields: the serial->engine speedup (engine_speedup) and the
+    numpy-engine->jax-backend d sweep (backend_sweep), with parity bits.
+    """
+    # _dump() in the bench modules writes cwd-relative; prefer that copy
+    # (freshest when run from the repo root) and fall back to the
+    # repo-root copy so out-of-tree invocations don't silently stale
+    # BENCH_engine.json
+    candidates = [
+        os.path.join("results", "bench", "engine_speedup.json"),
+        os.path.join(_REPO_ROOT, "results", "bench", "engine_speedup.json"),
+    ]
+    src = next((p for p in candidates if os.path.exists(p)), None)
+    if src is None:
+        return
+    with open(src) as fh:
+        data = json.load(fh)
+    sweep = data.get("backend_sweep", [])
+    summary = {
+        "serial_vs_engine": {
+            "trials": data.get("trials"),
+            "steps": data.get("steps"),
+            "speedup": data.get("speedup"),
+            "bitwise_mismatches": data.get("bitwise_mismatches"),
+        },
+        "numpy_vs_jax": [
+            {k: row[k] for k in ("d", "trials", "steps", "numpy_s",
+                                 "jax_warm_s", "jax_cold_s", "speedup",
+                                 "control_parity", "value_parity")}
+            for row in sweep
+        ],
+        "jax_target_3x_at_1M": all(
+            r["speedup"] >= 3.0 for r in sweep if r["d"] >= 1 << 20
+        ) if any(r["d"] >= 1 << 20 for r in sweep) else None,
+    }
+    with open(os.path.join(_REPO_ROOT, "BENCH_engine.json"), "w") as fh:
+        json.dump(summary, fh, indent=1)
+        fh.write("\n")
 
 
 def main() -> None:
@@ -24,6 +73,7 @@ def main() -> None:
             failures += 1
             print(f"{fn.__name__},0.0,ERROR:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    write_bench_engine()
     if failures:
         sys.exit(1)
 

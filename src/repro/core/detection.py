@@ -106,6 +106,33 @@ def detect_groups(symbols: jnp.ndarray, group_of_worker: jnp.ndarray,
     return group_fault, mismatch
 
 
+def detect_groups_batched(symbols: jnp.ndarray, group_of_worker: jnp.ndarray,
+                          tau: float = 1e-9):
+    """Replica compare over B trials at once, against each group's FIRST
+    member (ascending worker id) with an ABSOLUTE tolerance — mirroring
+    the scenario engines' check-iteration compare (``|g - g_first| >
+    tau``) in symbol space.  Because sketches are linear and honest
+    replicas are bitwise copies, a group's symbols are equal exactly
+    when its gradients are; for d <= k the sketch IS a signed
+    permutation of the gradient and the verdict is identical.
+
+    symbols: (B, n, k); group_of_worker: (B, n) int32, -1 idle.
+    Returns (trial_fault (B,) bool, worker_mismatch (B, n) bool).  The
+    jitted engine (repro.core.engine_jax) calls this every check
+    iteration inside its scan.
+    """
+    B, n, _ = symbols.shape
+    valid = group_of_worker >= 0
+    same = (group_of_worker[:, :, None] == group_of_worker[:, None, :]) \
+        & valid[:, None, :] & valid[:, :, None]
+    idx = jnp.arange(n)
+    first = jnp.min(jnp.where(same, idx[None, None, :], n), axis=2)
+    ref = symbols[jnp.arange(B)[:, None], jnp.minimum(first, n - 1)]
+    dev = jnp.abs(symbols - ref).max(axis=2)
+    mismatch = valid & (first < n) & (dev > tau)
+    return mismatch.any(axis=1), mismatch
+
+
 def detect_full(replica_grads: jnp.ndarray, tau: float = DEFAULT_TAU):
     """Paper-faithful replica comparison on full gradients.
 

@@ -49,6 +49,7 @@ tests/scenarios.  See docs/scenarios.md for the vocabulary.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 from typing import Callable
@@ -119,14 +120,14 @@ def worker_gradients(shard_g: np.ndarray, shard_of_worker: np.ndarray,
     return g
 
 
-_ARANGE = np.arange(1024)
-
-
+@functools.lru_cache(maxsize=64)
 def _arange(k: int) -> np.ndarray:
-    global _ARANGE
-    if len(_ARANGE) < k:
-        _ARANGE = np.arange(2 * k)
-    return _ARANGE[:k]
+    """Cached ``np.arange(k)`` (read-only).  ``lru_cache`` makes the
+    cache safe under concurrent benchmark runs — the old grow-on-demand
+    module global could be reassigned mid-read by another thread."""
+    out = np.arange(k)
+    out.setflags(write=False)
+    return out
 
 
 def aggregate(weight: np.ndarray, grads: np.ndarray) -> np.ndarray:
@@ -174,6 +175,8 @@ class TrialSpec:
     lr: float = 0.05
     seed: int = 1
     problem_seed: int = 0
+    n_data: int = 256            # least-squares problem rows
+    d: int = 8                   # gradient dimension
     onset: int = 0               # byz workers behave honestly before this step
     events: tuple[FaultEvent, ...] = ()
     label: str = ""
@@ -187,7 +190,8 @@ class TrialSpec:
         harnesses; drops the engine-only fields)."""
         return {k: getattr(self, k) for k in (
             "n", "f", "byz", "attack", "p_tamper", "steps", "q", "mode",
-            "filter_name", "selective", "lr", "seed", "problem_seed")}
+            "filter_name", "selective", "lr", "seed", "problem_seed",
+            "n_data", "d")}
 
 
 # ---------------------------------------------------------------------------
@@ -287,14 +291,12 @@ def _grouped_rows(n: int, act_idx: np.ndarray, r: int,
     return a, np.sort(mem.reshape(m, r), axis=1)
 
 
-_GID_CACHE: dict[tuple, np.ndarray] = {}
-
-
+@functools.lru_cache(maxsize=256)
 def _gid(m: int, r: int) -> np.ndarray:
-    key = (m, r)
-    out = _GID_CACHE.get(key)
-    if out is None:
-        out = _GID_CACHE[key] = np.repeat(np.arange(m, dtype=np.int32), r)
+    """Cached group-id pattern [0,0,..,1,1,..] (read-only; thread-safe —
+    see ``_arange``)."""
+    out = np.repeat(np.arange(m, dtype=np.int32), r)
+    out.setflags(write=False)
     return out
 
 
@@ -509,8 +511,38 @@ def _q_fixed(spec: TrialSpec, f_t: int) -> float:
     return float(spec.q)
 
 
-def run_batch(specs: list[TrialSpec]) -> BatchResult:
+class ScheduleRecorder:
+    """Per-step control trace of a numpy-engine pass.
+
+    When handed to ``run_batch(..., _recorder=rec)``, the engine appends
+    one dict per iteration capturing everything that determines the
+    step's *control flow* and aggregation structure: check decisions,
+    assignment arrays, tamper hits (both phases), identify events and
+    their 2f+1 assignments, aggregation weights, live/active masks.
+    The jax backend (repro.core.engine_jax) stacks these into device
+    arrays and replays the heavy math on device — the trace holds only
+    (B, n)-sized control state, never gradients, so recording a trial
+    batch on a tiny proxy problem costs O(B * T * n) regardless of d.
+    """
+
+    def __init__(self):
+        self.steps: list[dict] = []
+
+    def on_step(self, **arrays) -> None:
+        self.steps.append(arrays)
+
+
+def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
+              _recorder: "ScheduleRecorder | None" = None,
+              **backend_kwargs) -> BatchResult:
     """Run B independent protocol trials in one vectorized pass.
+
+    ``backend="numpy"`` (default) is the host engine below — the
+    bitwise parity oracle.  ``backend="jax"`` dispatches to the jitted
+    on-device engine (repro.core.engine_jax.run_batch_jax): same
+    protocol, one ``lax.scan`` over the whole iteration loop, exact on
+    control quantities and float-tolerance-close on values; see
+    docs/performance.md.
 
     Rare, trial-local work (check-iteration detection, reactive votes,
     state transitions) stays per-trial — it must replay each trial's
@@ -520,22 +552,41 @@ def run_batch(specs: list[TrialSpec]) -> BatchResult:
     """
     from repro.core.simulation import SimResult, make_problem
 
+    if backend == "jax":
+        from repro.core.engine_jax import run_batch_jax
+
+        return run_batch_jax(specs, **backend_kwargs)
+    if backend != "numpy":
+        raise ValueError(f"unknown engine backend {backend!r}")
+    if backend_kwargs:
+        raise TypeError(
+            f"numpy backend takes no extra kwargs: {sorted(backend_kwargs)}")
+
     t_start = time.perf_counter()
     specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
     B = len(specs)
     if B == 0:
         return BatchResult([], [], 0.0)
 
-    # -- problems (cached by problem_seed; all trials share n_data, d) ----
-    problems: dict[int, tuple] = {}
+    # -- problems (cached by (problem_seed, dims); trials share n_data, d) --
+    dims = {(s.n_data, s.d) for s in specs}
+    if len(dims) != 1:
+        raise ValueError(f"trials must share (n_data, d), got {sorted(dims)}")
+    problems: dict[tuple, tuple] = {}
     for s in specs:
-        if s.problem_seed not in problems:
-            problems[s.problem_seed] = make_problem(seed=s.problem_seed)
+        key = (s.problem_seed, s.n_data, s.d)
+        if key not in problems:
+            problems[key] = make_problem(n_data=s.n_data, d=s.d,
+                                         seed=s.problem_seed)
     shared_problem = len(problems) == 1
-    A0 = problems[specs[0].problem_seed][0]
+
+    def _problem(s: TrialSpec) -> tuple:
+        return problems[(s.problem_seed, s.n_data, s.d)]
+
+    A0 = _problem(specs[0])[0]
     n_data, d = A0.shape
     if shared_problem:
-        _, y0, wt0 = problems[specs[0].problem_seed]
+        _, y0, wt0 = _problem(specs[0])
         A_b = np.broadcast_to(A0, (B, n_data, d))
         y_b = np.broadcast_to(y0, (B, n_data))
         w_true = [wt0] * B
@@ -544,7 +595,7 @@ def run_batch(specs: list[TrialSpec]) -> BatchResult:
         y_b = np.empty((B, n_data))
         w_true = []
         for b, s in enumerate(specs):
-            A, y, wt = problems[s.problem_seed]
+            A, y, wt = _problem(s)
             A_b[b], y_b[b] = A, y
             w_true.append(wt)
 
@@ -637,6 +688,12 @@ def run_batch(specs: list[TrialSpec]) -> BatchResult:
         else:
             live = steps_arr > t
             live_all = bool(live.all())
+
+        if _recorder is not None:  # phase-2 capture buffers for this step
+            rec_sh2 = np.zeros((B, n_max), np.int32)
+            rec_gr2 = np.full((B, n_max), -1, np.int32)
+            rec_m2 = np.ones(B, np.int64)
+            rec_tam2 = np.zeros((B, n_max), bool)
 
         # -- membership churn events (engine-only) ------------------------
         for b in has_events:
@@ -757,10 +814,9 @@ def run_batch(specs: list[TrialSpec]) -> BatchResult:
                                               group_all[sub])
 
         # -- Byzantine tampering (phase 1) --------------------------------
-        if has_byz:
-            hits = streams.phase1_hits(t, live)
-            if hits is not None:
-                _apply_attacks(grads, hits[0], hits[1], trials, att_codes)
+        hits = streams.phase1_hits(t, live) if has_byz else None
+        if hits is not None:
+            _apply_attacks(grads, hits[0], hits[1], trials, att_codes)
 
         # -- verdicts ------------------------------------------------------
         # fast-path counters vectorized; check/draco/filter per trial
@@ -811,6 +867,13 @@ def run_batch(specs: list[TrialSpec]) -> BatchResult:
                 if tam:
                     _apply_attacks(g2[None], np.zeros(len(tam), np.int64),
                                    np.asarray(tam), [tr], att_codes[b:b + 1])
+                if _recorder is not None:
+                    k = len(ai.shard_of_worker)
+                    rec_sh2[b, :k] = ai.shard_of_worker
+                    rec_gr2[b, :k] = ai.group_of_worker
+                    rec_m2[b] = ai.num_shards
+                    if tam:
+                        rec_tam2[b, tam] = True
                 used_t[b] += ai.num_shards
                 comp_t[b] += ai.num_shards * ai.replication
                 votes, newly = [], set()
@@ -845,6 +908,21 @@ def run_batch(specs: list[TrialSpec]) -> BatchResult:
             voted[b] = np.asarray(filters_mod.FILTERS[name](
                 jnp.asarray(grads[b][act]), max(1, s.f)))
             agg_weight[b] = 0.0
+
+        if _recorder is not None:
+            tam1 = np.zeros((B, n_max), bool)
+            if hits is not None:
+                tam1[hits[0], hits[1]] = True
+            _recorder.on_step(
+                live=live.copy(), checks=checks.copy(),
+                vote1=(draco_mask & live),
+                shard1=np.array(shard_all), group1=np.array(group_all),
+                m1=np.asarray(m_all, np.int64).copy(),
+                aggw=agg_weight.copy(), tam1=tam1,
+                identify=identified_t.copy(),
+                shard2=rec_sh2, group2=rec_gr2, m2=rec_m2, tam2=rec_tam2,
+                active=bstate.active.copy(),
+            )
 
         # -- accounting + update ------------------------------------------
         used_acc += used_t
@@ -928,6 +1006,8 @@ class ScenarioMatrix:
     p_tamper: float = 0.8
     lr: float = 0.05
     problem_seed: int = 0
+    n_data: int = 256
+    d: int = 8
 
     def expand(self) -> list[TrialSpec]:
         out = []
@@ -939,14 +1019,14 @@ class ScenarioMatrix:
                 p_tamper=self.p_tamper, steps=self.steps, q=mo.q,
                 mode=mo.mode, filter_name=mo.filter_name,
                 selective=mo.selective, lr=self.lr, seed=sd,
-                problem_seed=self.problem_seed, onset=fp.onset,
-                events=fp.events,
+                problem_seed=self.problem_seed, n_data=self.n_data,
+                d=self.d, onset=fp.onset, events=fp.events,
                 label=f"{mo.name}/{at}/{fp.name}/s{sd}",
             ))
         return out
 
-    def run(self) -> BatchResult:
-        return run_batch(self.expand())
+    def run(self, **kwargs) -> BatchResult:
+        return run_batch(self.expand(), **kwargs)
 
 
 _RAND = ModeSpec("randomized_q0.2", "randomized", q=0.2)

@@ -1,0 +1,536 @@
+"""Jitted on-device engine backend: the whole protocol loop as ONE
+``lax.scan`` over the batched per-iteration step.
+
+``run_batch(specs, backend="jax")`` lands here.  The numpy engine
+(repro.core.engine) stays the parity oracle; this backend splits the
+protocol into
+
+ * a **control plane** on the host: the numpy engine's own state machine
+   replayed once with a ``ScheduleRecorder`` to produce dense per-step
+   schedule arrays — check decisions, assignment layouts, tamper hits
+   (both phases), identify events and their 2f+1 assignments,
+   aggregation weights, live/active masks.  Control flow for the
+   paper's fixed-q protocol classes is *value-independent* (detection
+   outcomes depend only on WHO tampered, not on gradient magnitudes,
+   for always-detectable attacks), so the control replay runs on a tiny
+   proxy problem — its cost is O(B·T·n), independent of the gradient
+   dimension d.  Value-dependent classes (adaptive q*, attacks whose
+   detectability vanishes at the convergence floor) replay on the real
+   problem instead ("oracle" schedule) — exact, but the replay then
+   costs one numpy-engine pass;
+
+ * a **data plane** on device: a single jitted function scans the
+   schedule over iterations, recomputing every float quantity —
+   residuals, losses, shard gradients, Byzantine attacks, detection
+   symbols, majority-vote winners, aggregation, the parameter update —
+   with NO host synchronization inside the scan.  Honest replicas are
+   copies and every attack is affine, so the whole "shard gradients →
+   tamper → aggregate/vote" pipeline folds algebraically into per-row
+   residual coefficients: an iteration pays exactly two d-sized
+   contractions, and nothing of shape (B, n, d) is ever materialized
+   (filter baselines excepted).  Detection and vote agreement run on
+   k-dim CountSketch symbols derived from pre-sketched data rows by the
+   same linearity.  The batched Pallas kernels (repro.kernels.ops
+   ``batched_*``: Mosaic on TPU, ref-equivalent XLA elsewhere) do the
+   sketching, the symbol-domain vote agreement, and the per-trial
+   encodes.
+
+Parity contract (tests/test_engine_parity.py, docs/performance.md):
+control quantities — efficiency counters, check/identify schedules,
+identified sets, q-traces — match the numpy engine EXACTLY; float
+quantities (losses, iterates, final error) match to float32 tolerance
+(the device plane computes in f32; the numpy engine in f64), asserted
+at atol/rtol documented in the tests.
+
+Engine-only extras supported: late onset, crash/recover events,
+selective checks, filter baselines (mean / median / krum), draco.
+Custom attack callables and non-affine attacks are not representable
+on device and raise ``NotImplementedError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.detection import detect_groups_batched
+from repro.core.engine import (
+    BatchResult,
+    ScheduleRecorder,
+    TrialSpec,
+    run_batch,
+)
+from repro.core.simulation import make_problem
+
+# affine attack table: g' = alpha * g + beta * 1 + nu * noisevec, where
+# noisevec is ATTACKS["noise"]'s fixed default_rng(0) draw.  Mirrors
+# repro.core.simulation.ATTACKS exactly.
+AFFINE_ATTACKS: dict[str, tuple[float, float, float]] = {
+    "none": (1.0, 0.0, 0.0),
+    "sign_flip": (-5.0, 0.0, 0.0),
+    "scale": (10.0, 0.0, 0.0),
+    "drift": (1.0, 1.0, 0.0),
+    "zero": (0.0, 0.0, 0.0),
+    "noise": (1.0, 0.0, 1.0),
+}
+
+# attacks whose detectability never depends on the gradient's magnitude:
+# "drift"/"noise" perturb by a fixed nonzero vector (always caught by the
+# 1e-9 replica compare), "none" never perturbs.  "sign_flip"/"scale"/
+# "zero" scale the gradient itself — undetectable exactly at the
+# convergence floor — so their detection trace is value-dependent.
+_VALUE_INDEPENDENT_ATTACKS = frozenset({"none", "drift", "noise"})
+
+_FILTER_CODES = {"mean": 0, "median": 1, "krum": 2}
+
+_PROXY_N_DATA = 64
+_PROXY_D = 4
+
+TAU_VOTE = 1e-9       # matches majority_vote_np(tau=1e-9) in both engines
+TAU_DETECT = 1e-9     # matches the engine's absolute replica compare
+
+# element budget for sizing trials-per-device-chunk: the scan's largest
+# live array is ~4 (B, d) buffers (W + update terms), or the (B, n, d)
+# gradient stack when filter trials force it — either way the chunk is
+# chosen to keep ~1 GiB of f32 in flight
+_CHUNK_ELEMS = 1 << 27
+
+
+def _filter_name(spec: TrialSpec) -> str | None:
+    if not spec.mode.startswith("filter"):
+        return None
+    return spec.mode.split(":", 1)[1] if ":" in spec.mode else spec.filter_name
+
+
+def _is_adaptive(spec: TrialSpec) -> bool:
+    return spec.q is None and spec.mode == "randomized"
+
+
+def proxy_schedulable(spec: TrialSpec) -> bool:
+    """True when the trial's control flow is value-independent, i.e. the
+    schedule replay may run on a tiny proxy problem at O(1) cost in d."""
+    if _is_adaptive(spec):
+        return False          # q*_t depends on the observed loss
+    if not spec.byz:
+        return True           # nothing ever tampers -> nothing to detect
+    if spec.mode in ("none",) or spec.mode.startswith("filter"):
+        return True           # no detection phase at all
+    return spec.attack in _VALUE_INDEPENDENT_ATTACKS
+
+
+def _validate(specs: list[TrialSpec]) -> None:
+    for s in specs:
+        if not isinstance(s.attack, str) or s.attack not in AFFINE_ATTACKS:
+            raise NotImplementedError(
+                f"jax backend supports the affine attack table "
+                f"{sorted(AFFINE_ATTACKS)}, got {s.attack!r}")
+        name = _filter_name(s)
+        if name is not None and name not in _FILTER_CODES:
+            raise NotImplementedError(
+                f"jax backend supports filters {sorted(_FILTER_CODES)}, "
+                f"got {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Control plane: record the numpy engine's per-step schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Stacked (T, B, ...) control arrays + the control-plane results."""
+
+    arrays: dict[str, np.ndarray]
+    control: BatchResult
+    used_proxy: bool
+
+
+def build_schedule(specs: list[TrialSpec], mode: str = "auto") -> Schedule:
+    """Replay the numpy engine's control machinery into dense arrays.
+
+    mode: "proxy" forces the tiny-problem replay (valid only when every
+    trial is ``proxy_schedulable``), "oracle" forces the real-problem
+    replay, "auto" picks proxy whenever valid.
+    """
+    eligible = all(proxy_schedulable(s) for s in specs)
+    if mode == "auto":
+        mode = "proxy" if eligible else "oracle"
+    if mode == "proxy" and not eligible:
+        bad = [s.label or i for i, s in enumerate(specs)
+               if not proxy_schedulable(s)]
+        raise ValueError(
+            f"proxy schedule invalid for value-dependent trials: {bad}")
+    if mode not in ("proxy", "oracle"):
+        raise ValueError(f"unknown schedule mode {mode!r}")
+
+    if mode == "proxy":
+        n_data = max(_PROXY_N_DATA, 2 * max(s.n for s in specs))
+        ctrl_specs = [dataclasses.replace(s, n_data=n_data, d=_PROXY_D)
+                      for s in specs]
+    else:
+        ctrl_specs = specs
+    rec = ScheduleRecorder()
+    control = run_batch(ctrl_specs, _recorder=rec)
+    keys = rec.steps[0].keys() if rec.steps else ()
+    arrays = {k: np.stack([st[k] for st in rec.steps]) for k in keys}
+    return Schedule(arrays, control, mode == "proxy")
+
+
+# ---------------------------------------------------------------------------
+# Data plane: the jitted scan
+# ---------------------------------------------------------------------------
+
+
+def _shard_mask(shard, group, m, n_data):
+    """(B, n) shard layout -> (B, n, I) f32 row-ownership mask.
+
+    Row i belongs to worker w iff i // rows == shard[w] (contiguous
+    shards of rows = I // m rows each; remainder rows dropped), and w is
+    a group member.  This is ``shard_batch_indices`` as a dense mask.
+    """
+    rows = n_data // jnp.maximum(m, 1)                         # (B,)
+    i = jnp.arange(n_data, dtype=jnp.int32)
+    owner = i[None, :] // jnp.maximum(rows, 1)[:, None]        # (B, I)
+    used = i[None, :] < (m * rows)[:, None]
+    mask = (owner[:, None, :] == shard[:, :, None]) \
+        & used[:, None, :] & (group >= 0)[:, :, None]
+    return mask.astype(jnp.float32), rows
+
+
+def _apply_affine(g, tam, alpha, beta, nu, noisevec, has_bias: bool):
+    """Masked affine Byzantine attacks on a (B, n, d) gradient stack."""
+    tam3 = tam[:, :, None]
+    out = jnp.where(tam3, alpha[:, None, None] * g, g)
+    if has_bias:
+        add = beta[:, None, None] + nu[:, None, None] * noisevec[None, None]
+        out = out + jnp.where(tam3, add, 0.0)
+    return out
+
+
+def _masked_median(g, act):
+    """Coordinate-wise median over each trial's active workers."""
+    B = g.shape[0]
+    x = jnp.where(act[:, :, None], g, jnp.inf)
+    x = jnp.sort(x, axis=1)
+    cnt = act.sum(axis=1)
+    lo = jnp.maximum((cnt - 1) // 2, 0)
+    hi = jnp.maximum(cnt // 2, 0)
+    rows = jnp.arange(B)
+    return 0.5 * (x[rows, lo] + x[rows, hi])
+
+
+def _masked_krum(g, act, f):
+    """KRUM (m=1) over each trial's active workers, inactive rows masked
+    out of distances, scores and the argmin — same winner as
+    ``filters.krum`` on the active subset (ascending worker order)."""
+    B, n, d = g.shape
+    diff = g[:, :, None, :] - g[:, None, :, :]
+    d2 = (diff * diff).sum(-1)                                  # (B, n, n)
+    pair_ok = act[:, :, None] & act[:, None, :]
+    d2 = jnp.where(pair_ok, d2, 1e30) + jnp.eye(n) * 1e30
+    cnt = act.sum(axis=1)                                       # (B,)
+    kth = jnp.clip(cnt - f - 2, 1, n)                           # (B,)
+    s = jnp.sort(d2, axis=2)
+    csum = jnp.cumsum(s, axis=2)
+    rows = jnp.arange(B)
+    scores = csum[rows[:, None], jnp.arange(n)[None, :],
+                  jnp.minimum(kth - 1, n - 1)[:, None]]         # (B, n)
+    scores = jnp.where(act, scores, jnp.inf)
+    best = jnp.argmin(scores, axis=1)
+    return g[rows, best]
+
+
+def _masked_mean(g, act):
+    cnt = jnp.maximum(act.sum(axis=1), 1)
+    return (g * act[:, :, None]).sum(axis=1) / cnt[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shared", "has_filter", "has_bias", "impl"),
+)
+def _device_scan(A, y, W0, stat, xs, noisevec, pid, *, shared: bool,
+                 has_filter: bool, has_bias: bool, impl: str | None):
+    """The fused protocol loop: scan the schedule over iterations.
+
+    Every iteration pays only two d-sized contractions (residual and
+    update).  Honest replicas are copies and attacks are affine, so the
+    whole "shard grads → tamper → aggregate/vote" pipeline folds into
+    per-row residual coefficients; detection symbols and vote agreement
+    run in the k-dim sketch domain, built from pre-sketched data rows
+    (``SA``) by the same linearity.  A replica group's symbols are
+    bitwise equal exactly when its full gradients are (identical
+    coefficient rows → identical contractions), so symbol-domain
+    winners match the numpy engine's full-vector vote outside the
+    detectability floor — where all candidates agree within tau and any
+    winner's value is within tolerance anyway.  Nothing of shape
+    (B, n, d) is ever materialized, except for the genuinely nonlinear
+    gradient-filter baselines (compiled only when present)."""
+    from repro.kernels import ops
+
+    n_data = A.shape[-2]
+    lr, alpha, beta, nu = stat["lr"], stat["alpha"], stat["beta"], stat["nu"]
+    fcode, farr = stat["fcode"], stat["farr"]
+
+    def contract(cr):                  # (B, I) row weights -> (B, d)
+        if shared:
+            return jnp.einsum("bi,id->bd", cr, A)
+        return ops.batched_coded_encode(cr[:, None, :], A, impl=impl)[:, 0]
+
+    def agg_value(coeff, tam, mask, cr_base):
+        """(B, n) aggregation coefficients -> (B, d) update value, with
+        the affine attacks folded in: sum_w coeff_w * attack_w(g_w)."""
+        aeff = jnp.where(tam, alpha[:, None], 1.0) * coeff
+        upd = contract(jnp.einsum("bw,bwi->bi", aeff, mask) * cr_base)
+        if has_bias:
+            tw = coeff * tam
+            upd = upd + (tw * beta[:, None]).sum(axis=1)[:, None] \
+                + (tw * nu[:, None]).sum(axis=1)[:, None] * noisevec[None]
+        return upd
+
+    def symbols(mask, cr_base, tam, SA_t, sk_one, sk_noise):
+        """Per-worker detection symbols: sketch linearity turns the
+        worker's gradient sketch into its coefficient row times the
+        pre-sketched data rows; attacks act affinely on symbols too."""
+        C = mask * cr_base[:, None, :]                       # (B, n, I)
+        skw = jnp.einsum("bwi,bik->bwk", C, SA_t[pid])
+        if has_bias:
+            add = beta[:, None, None] * sk_one[None, None] \
+                + nu[:, None, None] * sk_noise[None, None]
+        else:
+            add = 0.0
+        return jnp.where(tam[:, :, None],
+                         alpha[:, None, None] * skw + add, skw)
+
+    def step(W, x):
+        if shared:
+            resid = jnp.einsum("id,bd->bi", A, W) - y[None, :]
+        else:
+            resid = jnp.einsum("bid,bd->bi", A, W) - y
+        loss = (resid * resid).mean(axis=1)
+
+        mask1, rows1 = _shard_mask(x["shard1"], x["group1"], x["m1"],
+                                   n_data)
+        cr1 = resid * (2.0 / rows1)[:, None]                 # (B, I)
+
+        # -- weighted aggregation (fast + clean-check trials) ----------
+        upd = agg_value(x["aggw"], x["tam1"], mask1, cr1)
+
+        # -- detection symbols + on-device check verdicts --------------
+        skt1 = symbols(mask1, cr1, x["tam1"], x["SA"], x["sk_one"],
+                       x["sk_noise"])
+        fault, _ = detect_groups_batched(skt1, x["group1"], tau=TAU_DETECT)
+        det = x["checks"] & fault
+
+        # -- majority votes (draco every step; identify rounds rare) ---
+        def vote_part(shard, group, m, tam, gate, skt=None, mask=None,
+                      cr=None):
+            def compute(_):
+                if skt is None:
+                    mask_, rows_ = _shard_mask(shard, group, m, n_data)
+                    cr_ = resid * (2.0 / rows_)[:, None]
+                    skt_ = symbols(mask_, cr_, tam, x["SA"], x["sk_one"],
+                                   x["sk_noise"])
+                else:
+                    mask_, cr_, skt_ = mask, cr, skt
+                gv = jnp.where(gate[:, None], group, -1)
+                wc, _ = ops.batched_vote(skt_, gv, tau=TAU_VOTE, impl=impl)
+                coeff = jnp.where(gate[:, None],
+                                  wc / jnp.maximum(m, 1)[:, None], 0.0)
+                return agg_value(coeff, tam, mask_, cr_)
+
+            return jax.lax.cond(gate.any(), compute,
+                                lambda _: jnp.zeros_like(W0), None)
+
+        upd = upd + vote_part(x["shard1"], x["group1"], x["m1"], x["tam1"],
+                              x["vote1"], skt=skt1, mask=mask1, cr=cr1)
+        upd = upd + vote_part(x["shard2"], x["group2"], x["m2"], x["tam2"],
+                              x["identify"])
+
+        # -- gradient-filter baselines (genuinely need the stack) ------
+        if has_filter:
+            C = mask1 * cr1[:, None, :]
+            if shared:
+                g1 = jnp.einsum("bwi,id->bwd", C, A)
+            else:
+                g1 = jnp.einsum("bwi,bid->bwd", C, A)
+            gt1 = _apply_affine(g1, x["tam1"], alpha, beta, nu, noisevec,
+                                has_bias)
+            act = x["active"] & x["live"][:, None]
+            fupd = jnp.where((fcode == 1)[:, None],
+                             _masked_median(gt1, act),
+                             _masked_mean(gt1, act))
+            fupd = jnp.where((fcode == 2)[:, None],
+                             _masked_krum(gt1, act, farr), fupd)
+            upd = jnp.where((fcode >= 0)[:, None], fupd, upd)
+
+        W = jnp.where(x["live"][:, None], W - lr[:, None] * upd, W)
+        return W, (loss, det)
+
+    W, (losses, det) = jax.lax.scan(step, W0, xs)
+    return W, losses, det
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+
+def run_batch_jax(specs, *, schedule: str = "auto",
+                  kernel_impl: str | None = None,
+                  chunk_trials: int | None = None) -> BatchResult:
+    """Run B protocol trials with the jitted on-device data plane.
+
+    schedule: "auto" | "proxy" | "oracle" (see ``build_schedule``).
+    kernel_impl: None (auto: Pallas on TPU, XLA elsewhere) | "pallas" |
+        "xla" — forwarded to the batched kernel ops.
+    chunk_trials: trials per device pass (default: memory-sized; only
+        filter trials materialize a (chunk, n, d) gradient stack).
+
+    The returned ``BatchResult`` additionally carries ``schedule`` (the
+    control plane) and ``detect_flags`` (T, B) — the scan's on-device
+    sketch-detection verdicts per iteration, validated against the
+    schedule's check outcomes in tests/test_engine_parity.py.
+    """
+    from repro.kernels import ops
+
+    t_start = time.perf_counter()
+    specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
+    if not specs:
+        return BatchResult([], [], 0.0)
+    # resolve once: the choice becomes a jit-cache key for _device_scan,
+    # so a mid-process REPRO_KERNEL_IMPL change must not split the run
+    kernel_impl = ops.resolve_impl(kernel_impl)
+    _validate(specs)
+    sched = build_schedule(specs, schedule)
+    B = len(specs)
+    if not sched.arrays:
+        # every trial has steps == 0: nothing to scan, and a proxy
+        # control pass would carry proxy-problem iterates — rerun the
+        # numpy engine on the real specs (free at zero steps)
+        return run_batch(specs)
+    T = len(sched.arrays["live"])
+    n_max = sched.arrays["shard1"].shape[2]
+
+    # -- real problem arrays (f32 device copies) -------------------------
+    problems: dict[tuple, tuple] = {}
+    for s in specs:
+        key = (s.problem_seed, s.n_data, s.d)
+        if key not in problems:
+            problems[key] = make_problem(n_data=s.n_data, d=s.d,
+                                         seed=s.problem_seed)
+    shared = len(problems) == 1
+    pkeys = list(problems)
+    pid_np = np.array([pkeys.index((s.problem_seed, s.n_data, s.d))
+                       for s in specs], np.int32)
+    first = problems[pkeys[0]]
+    n_data, d = first[0].shape
+    if shared:
+        A = jnp.asarray(first[0], jnp.float32)
+        y = jnp.asarray(first[1], jnp.float32)
+        w_true = [first[2]] * B
+    else:
+        A_np = np.empty((B, n_data, d), np.float32)
+        y_np = np.empty((B, n_data), np.float32)
+        w_true = []
+        for b, s in enumerate(specs):
+            Ab, yb, wt = problems[(s.problem_seed, s.n_data, s.d)]
+            A_np[b], y_np[b] = Ab, yb
+            w_true.append(wt)
+        A, y = jnp.asarray(A_np), jnp.asarray(y_np)
+
+    # -- per-trial statics ------------------------------------------------
+    abn = np.array([AFFINE_ATTACKS[s.attack] for s in specs], np.float32)
+    has_bias = bool((abn[:, 1:] != 0).any())
+    noisevec = (np.random.default_rng(0).normal(size=d).astype(np.float32)
+                if (abn[:, 2] != 0).any() else np.zeros(d, np.float32))
+    fcode = np.array([_FILTER_CODES.get(_filter_name(s), -1) for s in specs],
+                     np.int32)
+    has_filter = bool((fcode >= 0).any())
+    stat_np = dict(
+        lr=np.array([s.lr for s in specs], np.float32),
+        alpha=abn[:, 0].copy(), beta=abn[:, 1].copy(), nu=abn[:, 2].copy(),
+        fcode=fcode, farr=np.array([max(1, s.f) for s in specs], np.int32),
+    )
+
+    # -- stacked schedule -> scan xs --------------------------------------
+    a = sched.arrays
+    xs_np = dict(
+        live=a["live"], checks=a["checks"], vote1=a["vote1"],
+        identify=a["identify"],
+        m1=a["m1"].astype(np.int32), shard1=a["shard1"].astype(np.int32),
+        group1=a["group1"].astype(np.int32),
+        aggw=a["aggw"].astype(np.float32), tam1=a["tam1"],
+        m2=a["m2"].astype(np.int32), shard2=a["shard2"].astype(np.int32),
+        group2=a["group2"].astype(np.int32), tam2=a["tam2"],
+        active=a["active"],
+    )
+
+    # -- pre-sketched data rows for in-scan detection symbols -------------
+    # sketches are linear, so a worker's symbol is its residual-coefficient
+    # row times the (per-step-keyed) sketches of the data rows: one
+    # O(I * d) sketch pass per step HOISTED OUT of the scan replaces an
+    # O(B * n * d) per-step gradient sketch inside it.
+    P = len(pkeys)
+    rows_np = np.empty((P * n_data + 2, d), np.float32)
+    for p, key in enumerate(pkeys):
+        rows_np[p * n_data:(p + 1) * n_data] = problems[key][0]
+    rows_np[-2] = 1.0
+    rows_np[-1] = noisevec
+    rows_dev = jnp.asarray(rows_np)
+    keys_t = np.uint32(0x9E3779B9) * (np.arange(T, dtype=np.uint32) + 1)
+    sk_rows = jnp.stack([
+        ops.batched_sketch(rows_dev, keys_t[t], impl=kernel_impl)
+        for t in range(T)
+    ])                                               # (T, P*I + 2, k)
+    common = {
+        "SA": sk_rows[:, :P * n_data].reshape(T, P, n_data, -1),
+        "sk_one": sk_rows[:, -2],
+        "sk_noise": sk_rows[:, -1],
+    }
+
+    # -- chunk trials to bound scan memory: only filter trials ever
+    #    materialize a (chunk, n, d) gradient stack ------------------------
+    if chunk_trials is None:
+        per_trial = n_max * d if has_filter else 4 * d
+        chunk_trials = max(1, min(B, (2 * _CHUNK_ELEMS) // max(1, per_trial)))
+    W = np.empty((B, d), np.float64)
+    losses = np.empty((T, B))
+    det = np.empty((T, B), bool)
+    for lo in range(0, B, chunk_trials):
+        sl = slice(lo, min(lo + chunk_trials, B))
+        xs = {k: jnp.asarray(v[:, sl]) for k, v in xs_np.items()}
+        xs.update(common)
+        stat = {k: jnp.asarray(v[sl]) for k, v in stat_np.items()}
+        Wc, lc, dc = _device_scan(
+            A if shared else A[sl], y if shared else y[sl],
+            jnp.zeros((sl.stop - lo, d), jnp.float32), stat, xs,
+            jnp.asarray(noisevec), jnp.asarray(pid_np[sl]),
+            shared=shared, has_filter=has_filter,
+            has_bias=has_bias, impl=kernel_impl)
+        W[sl] = np.asarray(Wc, np.float64)
+        losses[:, sl] = np.asarray(lc, np.float64)
+        det[:, sl] = np.asarray(dc)
+
+    # -- materialize results: control plane + device values ---------------
+    from repro.core.simulation import SimResult
+
+    results = []
+    for b, (s, ctrl) in enumerate(zip(specs, sched.control.results)):
+        results.append(SimResult(
+            w=W[b],
+            w_true=w_true[b],
+            state=ctrl.state,
+            losses=losses[:s.steps, b].tolist(),
+            q_trace=ctrl.q_trace,
+            identify_step=ctrl.identify_step,
+        ))
+    out = BatchResult(specs, results, time.perf_counter() - t_start)
+    out.detect_flags = det
+    out.schedule = sched
+    return out

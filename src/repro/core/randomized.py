@@ -49,6 +49,22 @@ def decide_generator(seed: int) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence([int(seed), 0x0DEC1DE]))
 
 
+def selective_probabilities(alpha: np.ndarray, beta: np.ndarray,
+                            active: np.ndarray, q: float) -> np.ndarray:
+    """§5 selective checks: per-worker check probabilities q_i.
+
+    q_i is proportional to worker i's posterior fault rate (the Beta
+    mean alpha_i / (alpha_i + beta_i)), normalized so the TOTAL
+    per-iteration check rate stays ~q (sum over active q_i = q) —
+    suspicious workers trigger checks more often while the aggregate
+    cost (and the eq. 2 efficiency) is unchanged.  Shared by
+    ``ProtocolState.decide_check`` and the scenario engines' schedule
+    replay so both consume identical probabilities."""
+    rate = alpha / (alpha + beta)                              # (n,)
+    total = max(rate[active].sum(), 1e-9)
+    return np.clip(q * rate / total, 0.0, 1.0) * active
+
+
 @dataclasses.dataclass
 class BFTConfig:
     n: int                       # workers (data-axis size)
@@ -126,15 +142,8 @@ class ProtocolState:
         q = self.check_probability(observed_loss)
         self.last_q = q
         if self.cfg.selective and 0.0 < q < 1.0:
-            # §5 selective checks: per-worker probabilities proportional to
-            # the worker's posterior fault rate (Beta mean), normalized so
-            # the TOTAL per-iteration check rate stays ~q (sum q_i = q).
-            # Suspicious workers trigger checks more often; the aggregate
-            # cost (and eq. 2 efficiency) is unchanged.
-            rate = self.alpha / (self.alpha + self.beta)        # (n,)
-            act = self.active
-            total = max(rate[act].sum(), 1e-9)
-            q_i = np.clip(q * rate / total, 0.0, 1.0) * act
+            q_i = selective_probabilities(self.alpha, self.beta,
+                                          self.active, q)
             return bool((self.decide_rng.random(self.cfg.n) < q_i).any())
         return bool(self.decide_rng.random() < q)
 

@@ -90,10 +90,12 @@ def run_protocol(
     lr: float = 0.05,
     seed: int = 1,
     problem_seed: int = 0,
+    n_data: int = 256,
+    d: int = 8,
 ) -> SimResult:
     if isinstance(attack, str):
         attack = ATTACKS[attack]
-    A, y, w_true = make_problem(seed=problem_seed)
+    A, y, w_true = make_problem(n_data=n_data, d=d, seed=problem_seed)
     A1, y1 = A[None], y[None]            # length-1 batch for the primitives
     bft_mode = "filter" if mode.startswith("filter") else mode
     bft = BFTConfig(n=n, f=f, mode=bft_mode, q=q, p_assumed=p_tamper,

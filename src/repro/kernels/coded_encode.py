@@ -46,3 +46,39 @@ def coded_encode(coeffs: jnp.ndarray, grads: jnp.ndarray,
         interpret=interpret,
     )(coeffs, g)
     return out[:, :d]
+
+
+def _encode_kernel_batched(c_ref, g_ref, o_ref):
+    c = c_ref[0].astype(jnp.float32)                      # (n_sym, m)
+    g = g_ref[0].astype(jnp.float32)                      # (m, BD)
+    o_ref[0] = jnp.dot(c, g, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def coded_encode_batched(coeffs: jnp.ndarray, grads: jnp.ndarray,
+                         block_d: int = BLOCK_D, interpret: bool = False):
+    """Per-trial encode: (B, n_sym, m) @ (B, m, d) -> (B, n_sym, d) f32.
+
+    ``coded_encode`` with a leading batch dimension — grid (B, d-blocks),
+    each trial's coefficient matrix resident in VMEM while its gradient
+    matrix streams through.  The jitted engine (repro.core.engine_jax)
+    expresses weighted aggregation and vote means as 1-symbol encodes
+    over the (n,)-worker axis, so this is its per-iteration workhorse."""
+    B, n_sym, m = coeffs.shape
+    B2, m2, d = grads.shape
+    assert B == B2 and m == m2
+    pad = (-d) % block_d
+    g = jnp.pad(grads, ((0, 0), (0, 0), (0, pad)))
+    nsteps = g.shape[2] // block_d
+    out = pl.pallas_call(
+        _encode_kernel_batched,
+        grid=(B, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, n_sym, m), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, m, block_d), lambda b, i: (b, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, n_sym, block_d), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, n_sym, g.shape[2]), jnp.float32),
+        interpret=interpret,
+    )(coeffs, g)
+    return out[:, :, :d]

@@ -58,3 +58,41 @@ def pairwise_relmax(replicas: jnp.ndarray, block_d: int = BLOCK_D,
         out_shape=jax.ShapeDtypeStruct((R, R), jnp.float32),
         interpret=interpret,
     )(reps)
+
+
+def _agree_kernel_batched(reps_ref, o_ref):
+    i = pl.program_id(1)
+    x = reps_ref[0].astype(jnp.float32)                    # (R, BD)
+    a = x[:, None, :]
+    b = x[None, :, :]
+    rel = jnp.abs(a - b) / (1.0 + jnp.minimum(jnp.abs(a), jnp.abs(b)))
+    partial = rel.max(axis=-1)                             # (R, R)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] = jnp.maximum(o_ref[0], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_relmax_batched(replicas: jnp.ndarray, block_d: int = BLOCK_D,
+                            interpret: bool = False) -> jnp.ndarray:
+    """replicas (B, R, d) -> (B, R, R): ``pairwise_relmax`` with a
+    leading batch dimension — grid (B, d-blocks), one (R, R) VMEM
+    accumulator per batch row (revisited across that row's d-steps).
+
+    The batched scenario engine's jitted scan (repro.core.engine_jax)
+    calls this per iteration on all trials' replica stacks at once."""
+    B, R, d = replicas.shape
+    pad = (-d) % block_d
+    reps = jnp.pad(replicas, ((0, 0), (0, 0), (0, pad)))
+    nsteps = reps.shape[2] // block_d
+    return pl.pallas_call(
+        _agree_kernel_batched,
+        grid=(B, nsteps),
+        in_specs=[pl.BlockSpec((1, R, block_d), lambda b, i: (b, 0, i))],
+        out_specs=pl.BlockSpec((1, R, R), lambda b, i: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, R, R), jnp.float32),
+        interpret=interpret,
+    )(reps)

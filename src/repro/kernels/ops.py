@@ -3,8 +3,19 @@
 On CPU (this container) every entry point takes ``interpret=True``; on TPU
 the same call sites compile to Mosaic.  ``INTERPRET`` defaults to True when
 no TPU is present so library code can call these unconditionally.
+
+The ``batched_*`` ops (leading trial dimension) additionally carry an
+``impl`` switch because they sit on the jitted scenario engine's hot
+path (repro.core.engine_jax): ``"pallas"`` is the TPU kernel (interpret
+mode off-TPU — correct but slow, used by CI to keep the kernel path
+alive on CPU runners), ``"xla"`` is the pure-jnp fallback built on the
+ref.py definitions.  ``impl=None`` auto-selects: Pallas on TPU, XLA
+everywhere else.  ``REPRO_KERNEL_IMPL`` overrides the auto choice.
 """
 from __future__ import annotations
+
+import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,9 +23,29 @@ import jax.numpy as jnp
 from repro.kernels import coded_encode as _enc
 from repro.kernels import flash_attention as _fa
 from repro.kernels import majority_vote as _mv
+from repro.kernels import ref as _ref
 from repro.kernels import sketch as _sk
 
 INTERPRET = jax.default_backend() != "tpu"
+
+
+def resolve_impl(impl: str | None) -> str:
+    """Resolve a batched-op impl choice to "pallas" | "xla".
+
+    None -> REPRO_KERNEL_IMPL if set, else Pallas on TPU / XLA off-TPU.
+    Long-lived callers that bake the choice into a jit cache key (the
+    jitted engine) resolve ONCE up front so a later env change can't
+    produce a half-and-half run.
+    """
+    impl = impl or os.environ.get("REPRO_KERNEL_IMPL") or (
+        "xla" if INTERPRET else "pallas"
+    )
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown kernel impl {impl!r}")
+    return impl
+
+
+_batched_impl = resolve_impl
 
 
 def sketch(flat_g, key_scalar, k: int = 256, interpret: bool | None = None):
@@ -52,6 +83,106 @@ def coded_encode(coeffs, grads, interpret: bool | None = None):
     return _enc.coded_encode(
         coeffs, grads, interpret=INTERPRET if interpret is None else interpret
     )
+
+
+def batched_pairwise_relmax(replicas, *, impl: str | None = None,
+                            interpret: bool | None = None):
+    """(B, R, d) -> (B, R, R) relative max-difference matrices.
+
+    Pallas: grid (B, d-blocks), (R, R) VMEM accumulator per trial.  XLA:
+    d is folded in chunks so the (B, R, R, chunk) broadcast stays
+    bounded (~64 MiB) at production gradient sizes."""
+    if _batched_impl(impl) == "pallas":
+        return _mv.pairwise_relmax_batched(
+            replicas.astype(jnp.float32),
+            interpret=INTERPRET if interpret is None else interpret,
+        )
+    return _relmax_xla(replicas.astype(jnp.float32))
+
+
+@jax.jit
+def _relmax_xla(replicas):
+    B, R, d = replicas.shape
+    chunk = max(128, (1 << 24) // max(1, B * R * R))
+    if d <= chunk:
+        return _ref.batched_pairwise_maxdiff_ref(replicas)
+    pad = (-d) % chunk
+    x = jnp.pad(replicas, ((0, 0), (0, 0), (0, pad)))      # zero-pad: rel 0
+    x = x.reshape(B, R, -1, chunk).transpose(2, 0, 1, 3)   # (C, B, R, chunk)
+
+    def body(acc, xc):
+        return jnp.maximum(acc, _ref.batched_pairwise_maxdiff_ref(xc)), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((B, R, R), jnp.float32), x)
+    return acc
+
+
+def batched_vote(replicas, group_of_worker, tau: float = 1e-5, *,
+                 impl: str | None = None, interpret: bool | None = None):
+    """Majority votes for all replica groups of all trials at once.
+
+    replicas: (B, n, d) worker gradients; group_of_worker: (B, n) int32
+    (-1 = idle).  Every group's members hold (putatively) the same
+    shard gradient; the vote picks, per group, the lowest-indexed
+    worker agreeing with a strict in-group majority — the same winner
+    ``identification.majority_vote_np`` picks on the group's member
+    stack in ascending worker order.  Returns (winner_coeff (B, n) f32
+    one-hot-per-group, faulty (B, n) bool).  The voted VALUE for group
+    g is ``sum_w winner_coeff[w] * replicas[w]`` restricted to g; the
+    engine folds the whole mean-over-groups into one coded encode.
+    """
+    rel = batched_pairwise_relmax(replicas, impl=impl, interpret=interpret)
+    valid = group_of_worker >= 0                                  # (B, n)
+    same = (group_of_worker[:, :, None] == group_of_worker[:, None, :]) \
+        & valid[:, None, :] & valid[:, :, None]                   # (B, n, n)
+    agree = (rel <= tau) & same
+    counts = agree.sum(axis=2)                                    # (B, n)
+    gsize = same.sum(axis=2)
+    is_major = valid & (counts > gsize // 2)
+    n = replicas.shape[1]
+    idx = jnp.arange(n)
+    # lowest-indexed majority member of each group
+    cand = jnp.where(is_major, idx[None, :], n)
+    first = jnp.min(jnp.where(same, cand[:, None, :], n), axis=2)  # (B, n)
+    winner_coeff = (valid & (idx[None, :] == first)).astype(jnp.float32)
+    is_winner_row = jnp.take_along_axis(
+        agree, jnp.minimum(first, n - 1)[:, :, None].astype(jnp.int32),
+        axis=2,
+    )[:, :, 0]
+    faulty = valid & ~is_winner_row & (first < n)
+    return winner_coeff, faulty
+
+
+def batched_coded_encode(coeffs, grads, *, impl: str | None = None,
+                         interpret: bool | None = None):
+    """(B, n_sym, m) @ (B, m, d) -> (B, n_sym, d) f32 per-trial encode."""
+    if _batched_impl(impl) == "pallas":
+        return _enc.coded_encode_batched(
+            coeffs, grads,
+            interpret=INTERPRET if interpret is None else interpret,
+        )
+    return _ref.batched_coded_encode_ref(coeffs, grads)
+
+
+def batched_sketch(flat_g, key_scalar, k: int = 256, *,
+                   impl: str | None = None, interpret: bool | None = None):
+    """(B, d) -> (B, k) CountSketches under one shared key."""
+    if _batched_impl(impl) == "pallas":
+        return _sk.sketch_batched(
+            flat_g, key_scalar, k=k,
+            interpret=INTERPRET if interpret is None else interpret,
+        )
+    return _sketch_xla(flat_g, key_scalar, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _sketch_xla(flat_g, key_scalar, k):
+    B, d = flat_g.shape
+    pad = (-d) % k
+    g = jnp.pad(flat_g.astype(jnp.float32), ((0, 0), (0, pad)))
+    idx = jax.lax.iota(jnp.uint32, d + pad)
+    signed = g * _ref.hash_signs_ref(idx, key_scalar)[None]
+    return signed.reshape(B, -1, k).sum(axis=1)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,

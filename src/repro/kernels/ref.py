@@ -77,6 +77,31 @@ def coded_encode_ref(coeffs: jnp.ndarray, grads: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Batched variants (leading trial dimension) — naive vmaps of the above.
+# These double as the off-TPU XLA implementations behind the batched ops
+# in repro.kernels.ops (the jitted engine's inner loop); the blocked
+# relmax there exists only to bound peak memory, its values equal this.
+# ---------------------------------------------------------------------------
+
+def batched_sketch_ref(flat_g: jnp.ndarray, key_scalar, k: int) -> jnp.ndarray:
+    """(B, d) -> (B, k): per-row ``sketch_ref`` under one shared key."""
+    return jax.vmap(lambda g: sketch_ref(g, key_scalar, k))(flat_g)
+
+
+def batched_pairwise_maxdiff_ref(replicas: jnp.ndarray) -> jnp.ndarray:
+    """(B, R, d) -> (B, R, R): per-row ``pairwise_maxdiff_ref``."""
+    return jax.vmap(pairwise_maxdiff_ref)(replicas)
+
+
+def batched_coded_encode_ref(coeffs: jnp.ndarray,
+                             grads: jnp.ndarray) -> jnp.ndarray:
+    """(B, n_sym, m) @ (B, m, d) -> (B, n_sym, d), f32 accum."""
+    return jnp.einsum(
+        "bsm,bmd->bsd", coeffs.astype(jnp.float32), grads.astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (causal / windowed), GQA — see repro.models.attention
 # ---------------------------------------------------------------------------
 

@@ -103,3 +103,167 @@ def test_single_trial_batch_matches_serial():
     s = run_protocol(**cfg)
     assert s.final_error == b.final_error
     assert s.losses == b.losses
+
+
+# ===========================================================================
+# Jitted on-device backend: run_batch(..., backend="jax")
+#
+# Parity contract (documented in docs/performance.md): CONTROL quantities
+# — efficiency counters, check/identify schedules, identified sets,
+# q-traces — equal the numpy engine EXACTLY (they come from the same
+# host state machine).  FLOAT quantities are recomputed on device in
+# float32 (the numpy engine runs float64), so they match to the
+# tolerances below: converged trials agree to ~1e-6 absolute; the
+# deliberately-diverging unprotected trials agree to f32 relative
+# accuracy (~1e-6 of a ~1e9 iterate), which rtol covers.
+# ===========================================================================
+
+JAX_W_RTOL, JAX_W_ATOL = 1e-4, 1e-4
+JAX_LOSS_RTOL, JAX_LOSS_ATOL = 1e-3, 1e-4
+
+_jax_cache: dict = {}
+
+
+def _both_backends(name):
+    from repro.core.engine import SCENARIOS
+
+    if name not in _jax_cache:
+        mx = SCENARIOS[name]
+        _jax_cache[name] = (mx.run(), mx.run(backend="jax"))
+    return _jax_cache[name]
+
+
+def _scenario_names():
+    from repro.core.engine import SCENARIOS
+
+    return list(SCENARIOS)
+
+
+@pytest.mark.parametrize("name", _scenario_names())
+def test_jax_backend_control_parity(name):
+    """Control plane: exact equality with the numpy engine across the
+    whole SCENARIOS grid (identify steps, efficiency, q-trace, meters)."""
+    npb, jxb = _both_backends(name)
+    for rn, rj in zip(npb, jxb):
+        assert rn.identify_step == rj.identify_step
+        assert rn.efficiency == rj.efficiency
+        assert rn.q_trace == rj.q_trace
+        assert np.array_equal(rn.state.identified, rj.state.identified)
+        assert np.array_equal(rn.state.active, rj.state.active)
+        sm, jm = rn.state.meter, rj.state.meter
+        assert (sm.used, sm.computed, sm.check_iterations,
+                sm.identify_iterations) == (
+            jm.used, jm.computed, jm.check_iterations,
+            jm.identify_iterations)
+
+
+@pytest.mark.parametrize("name", _scenario_names())
+def test_jax_backend_value_parity(name):
+    """Data plane: float32 device values vs float64 host values."""
+    npb, jxb = _both_backends(name)
+    for spec, rn, rj in zip(npb.specs, npb, jxb):
+        np.testing.assert_allclose(rj.w, np.asarray(rn.w),
+                                   rtol=JAX_W_RTOL, atol=JAX_W_ATOL,
+                                   err_msg=spec.label)
+        np.testing.assert_allclose(np.asarray(rj.losses),
+                                   np.asarray(rn.losses),
+                                   rtol=JAX_LOSS_RTOL, atol=JAX_LOSS_ATOL,
+                                   err_msg=spec.label)
+        # exact fault-tolerance verdicts agree
+        assert (rn.final_error < 1e-3) == (rj.final_error < 1e-3), spec.label
+
+
+@pytest.mark.parametrize("name", _scenario_names())
+def test_jax_backend_sketch_detection_matches_engine(name):
+    """The scan's on-device sketch detection (DESIGN §7 symbols built
+    from pre-sketched data rows) reaches the numpy engine's
+    full-gradient verdict on every check iteration of the grid."""
+    _, jxb = _both_backends(name)
+    sched = jxb.schedule.arrays
+    mism = (jxb.detect_flags != sched["identify"]) & sched["checks"]
+    assert not mism.any()
+
+
+def test_jax_backend_proxy_schedule_equals_oracle():
+    """For value-independent trial classes the tiny-proxy control replay
+    must produce the identical schedule (and results) as a full
+    real-problem replay."""
+    specs = [
+        TrialSpec(byz=(2, 5), attack="drift", steps=80, q=0.4, seed=1),
+        TrialSpec(byz=(3,), attack="drift", steps=80, mode="draco",
+                  q=None, seed=0),
+        TrialSpec(byz=(4,), attack="noise", steps=80, q=0.3, seed=2),
+        TrialSpec(byz=(), attack="none", steps=80, q=0.4, seed=3),
+    ]
+    px = run_batch(specs, backend="jax", schedule="proxy")
+    ox = run_batch(specs, backend="jax", schedule="oracle")
+    assert px.schedule.used_proxy and not ox.schedule.used_proxy
+    for k, v in px.schedule.arrays.items():
+        assert np.array_equal(v, ox.schedule.arrays[k]), k
+    for rp, ro in zip(px, ox):
+        assert rp.identify_step == ro.identify_step
+        np.testing.assert_array_equal(rp.w, ro.w)
+
+
+def test_jax_backend_auto_schedule_selection():
+    eligible = [TrialSpec(byz=(2,), attack="drift", steps=20, q=0.5)]
+    dependent = [TrialSpec(byz=(2,), attack="sign_flip", steps=20, q=0.5)]
+    assert run_batch(eligible, backend="jax").schedule.used_proxy
+    assert not run_batch(dependent, backend="jax").schedule.used_proxy
+    with pytest.raises(ValueError):
+        run_batch(dependent, backend="jax", schedule="proxy")
+
+
+def test_jax_backend_interpret_kernels_smoke():
+    """The Pallas kernel path (interpret mode on CPU) stays alive inside
+    the jitted scan — the CI smoke configuration."""
+    specs = [
+        TrialSpec(byz=(2, 5), attack="drift", steps=25, q=0.6, seed=1),
+        TrialSpec(byz=(1,), attack="noise", steps=25, q=0.6, seed=2),
+    ]
+    npb = run_batch(specs)
+    jxb = run_batch(specs, backend="jax", kernel_impl="pallas")
+    for rn, rj in zip(npb, jxb):
+        assert rn.identify_step == rj.identify_step
+        np.testing.assert_allclose(rj.w, np.asarray(rn.w),
+                                   rtol=JAX_W_RTOL, atol=JAX_W_ATOL)
+
+
+def test_jax_backend_rejects_non_affine_attacks():
+    with pytest.raises(NotImplementedError):
+        run_batch([TrialSpec(attack=lambda g: g ** 2, steps=5)],
+                  backend="jax")
+
+
+def test_jax_backend_zero_steps_returns_real_problem():
+    """steps == 0 must hand back the REAL problem's (zero) iterate, not
+    the proxy control problem's (regression: the proxy early-return)."""
+    spec = TrialSpec(byz=(2,), attack="drift", steps=0, q=0.5)
+    rn = run_batch([spec])[0]
+    rj = run_batch([spec], backend="jax")[0]
+    assert rj.w.shape == rn.w.shape
+    assert rj.final_error == rn.final_error
+    assert rj.losses == rn.losses == []
+
+
+def test_jax_backend_mixed_batch():
+    """Non-shared problems (per-trial A, per-problem sketch tables),
+    mixed n/f, and non-uniform step counts through the device path."""
+    specs = [
+        TrialSpec(byz=(2, 5), attack="drift", steps=90, q=0.4, seed=1),
+        TrialSpec(byz=(2,), attack="noise", steps=60, q=0.3, seed=9,
+                  n=6, f=1, problem_seed=3),
+        TrialSpec(byz=(), attack="none", steps=75, q=0.5, seed=4,
+                  problem_seed=7),
+    ]
+    npb = run_batch(specs)
+    jxb = run_batch(specs, backend="jax")
+    for rn, rj in zip(npb, jxb):
+        assert rn.identify_step == rj.identify_step
+        assert rn.efficiency == rj.efficiency
+        assert len(rn.losses) == len(rj.losses)
+        np.testing.assert_allclose(rj.w, np.asarray(rn.w),
+                                   rtol=JAX_W_RTOL, atol=JAX_W_ATOL)
+        np.testing.assert_allclose(np.asarray(rj.losses),
+                                   np.asarray(rn.losses),
+                                   rtol=JAX_LOSS_RTOL, atol=JAX_LOSS_ATOL)

@@ -1,0 +1,159 @@
+"""Every op in repro.kernels.ops vs its repro.kernels.ref oracle, in
+interpret mode (CPU validation of the TPU kernels), including
+non-multiple-of-block shapes and the batched (leading trial dimension)
+variants the jitted engine drives.  For the batched ops, the Pallas
+kernel (interpret) and the XLA fallback are asserted against the SAME
+reference, so either dispatch choice is interchangeable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+IMPLS = ("pallas", "xla")
+
+
+# ---------------------------------------------------------------------------
+# single-item ops (interpret=True explicitly)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [8, 255, 256, 257, 70001])
+def test_sketch_vs_ref_interpret(d):
+    g = jax.random.normal(jax.random.PRNGKey(d), (d,), jnp.float32)
+    np.testing.assert_allclose(
+        ops.sketch(g, 99, k=256, interpret=True), ref.sketch_ref(g, 99, 256),
+        rtol=2e-5, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("R,d", [(3, 8), (5, 2047), (5, 2048), (7, 2049)])
+def test_pairwise_relmax_vs_ref_interpret(R, d):
+    reps = jax.random.normal(jax.random.PRNGKey(R + d), (R, d), jnp.float32)
+    np.testing.assert_allclose(
+        ops.pairwise_relmax(reps, interpret=True),
+        ref.pairwise_maxdiff_ref(reps), rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("n_sym,m,d", [(2, 3, 8), (3, 3, 2047), (4, 2, 2049)])
+def test_coded_encode_vs_ref_interpret(n_sym, m, d):
+    key = jax.random.PRNGKey(d)
+    C = jax.random.normal(key, (n_sym, m), jnp.float32)
+    G = jax.random.normal(key, (m, d), jnp.float32)
+    np.testing.assert_allclose(
+        ops.coded_encode(C, G, interpret=True), ref.coded_encode_ref(C, G),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_vote_vs_majority_vote_ref():
+    honest = jax.random.normal(jax.random.PRNGKey(0), (1000,), jnp.float32)
+    reps = jnp.tile(honest[None], (5, 1)).at[1].multiply(-3.0)
+    v_k, f_k, ok_k = ops.vote(reps, interpret=True)
+    v_r, f_r, ok_r = ref.majority_vote_ref(reps, tau=1e-5)
+    np.testing.assert_array_equal(v_k, v_r)
+    np.testing.assert_array_equal(f_k, f_r)
+    assert bool(ok_k) == bool(ok_r)
+
+
+@pytest.mark.parametrize("Sq,Sk", [(64, 64), (100, 100), (63, 127)])
+def test_flash_attention_vs_ref_interpret(Sq, Sk):
+    ks = jax.random.split(jax.random.PRNGKey(Sq + Sk), 3)
+    q = jax.random.normal(ks[0], (1, Sq, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, Sk, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, Sk, 2, 32), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32,
+                            interpret=True)
+    o_ref = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched ops: both impls vs the batched refs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("B,R,d", [(1, 3, 8), (3, 5, 2049), (4, 8, 700)])
+def test_batched_pairwise_relmax(impl, B, R, d):
+    reps = jax.random.normal(jax.random.PRNGKey(B + d), (B, R, d),
+                             jnp.float32)
+    np.testing.assert_allclose(
+        ops.batched_pairwise_relmax(reps, impl=impl, interpret=True),
+        ref.batched_pairwise_maxdiff_ref(reps), rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("B,s,m,d", [(1, 1, 8, 8), (3, 2, 4, 2049)])
+def test_batched_coded_encode(impl, B, s, m, d):
+    key = jax.random.PRNGKey(B + d)
+    C = jax.random.normal(key, (B, s, m), jnp.float32)
+    G = jax.random.normal(key, (B, m, d), jnp.float32)
+    np.testing.assert_allclose(
+        ops.batched_coded_encode(C, G, impl=impl, interpret=True),
+        ref.batched_coded_encode_ref(C, G), rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("B,d", [(1, 8), (3, 70001), (5, 256)])
+def test_batched_sketch(impl, B, d):
+    g = jax.random.normal(jax.random.PRNGKey(B + d), (B, d), jnp.float32)
+    got = ops.batched_sketch(g, 12345, impl=impl, interpret=True)
+    np.testing.assert_allclose(got, ref.batched_sketch_ref(g, 12345, 256),
+                               rtol=2e-5, atol=1e-3)
+    # row b == the single-item op on row b
+    np.testing.assert_allclose(got[0], ref.sketch_ref(g[0], 12345, 256),
+                               rtol=2e-5, atol=1e-3)
+
+
+def test_relmax_xla_chunking_matches_unchunked():
+    """The memory-bounded XLA fallback folds d in chunks; values must
+    equal the naive reference regardless of the chunk boundary."""
+    B, R = 12, 8                    # forces chunk = (1<<24)//(B*R*R) < d
+    d = (1 << 24) // (B * R * R) + 1000
+    reps = jax.random.normal(jax.random.PRNGKey(1), (B, R, d), jnp.bfloat16)
+    reps = reps.astype(jnp.float32)
+    np.testing.assert_array_equal(
+        ops.batched_pairwise_relmax(reps, impl="xla"),
+        ref.batched_pairwise_maxdiff_ref(reps),
+    )
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_batched_vote_matches_majority_vote_np(impl):
+    """Winners and faulty masks per replica group vs the host vote on
+    each group's member stack (ascending worker order)."""
+    from repro.core.identification import majority_vote_np
+
+    rng = np.random.default_rng(7)
+    n, d = 8, 64
+    group = np.array([[0, 0, 0, 1, 1, 1, -1, -1],
+                      [0, 1, 0, 1, 0, 1, 0, -1]], np.int32)
+    grads = np.zeros((2, n, d), np.float32)
+    for b in range(2):
+        vals = rng.normal(size=(2, d))
+        for w in range(n):
+            if group[b, w] >= 0:
+                grads[b, w] = vals[group[b, w]]
+    grads[0, 1] *= -4.0
+    grads[1, 4] += 2.0
+    coeff, faulty = ops.batched_vote(jnp.asarray(grads),
+                                     jnp.asarray(group), tau=1e-9,
+                                     impl=impl, interpret=True)
+    coeff, faulty = np.asarray(coeff), np.asarray(faulty)
+    for b in range(2):
+        for gid in np.unique(group[b][group[b] >= 0]):
+            mem = np.flatnonzero(group[b] == gid)
+            val, f_np, ok = majority_vote_np(grads[b][mem], tau=1e-9)
+            assert ok
+            winner = mem[int(np.argmax(
+                np.all(grads[b][mem] == val[None], axis=1)))]
+            assert coeff[b, winner] == 1.0
+            np.testing.assert_array_equal(faulty[b, mem], f_np)
+    # exactly one winner per group, none among idle workers
+    assert coeff[0].sum() == 2 and coeff[1].sum() == 2
+    assert not coeff[group < 0].any()
