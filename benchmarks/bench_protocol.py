@@ -19,6 +19,12 @@ instead of a serial run_protocol loop per cell:
                          numpy-engine -> jitted-jax-backend column at
                          production gradient dimensions (d sweep up to
                          2^20, 256 trials — target >= 3x at d >= 1M)
+  schedule_build         control-plane column: vectorized control-only
+                         replay vs full-engine proxy replay (>= 3x,
+                         arrays identical)
+  engine_devices         multi-device smoke: the sharded trials-mesh
+                         path on a forced 8-device host (throughput
+                         record, not a CPU speedup claim)
   fig2_code              Fig. 2: linear detection code — detection works,
                          communication = 1/2 of replication's
 
@@ -274,6 +280,109 @@ def _backend_speedup() -> tuple[list[tuple], list[dict]]:
     return rows, detail
 
 
+def schedule_build() -> list[tuple]:
+    """Control-plane throughput: the vectorized control-only replay
+    (build_schedule mode "vector") vs the full-engine proxy replay on a
+    256-trial fixed-q long-T sweep — the host-side bottleneck the jax
+    backend pays per run.  Acceptance bar: >= 3x, arrays identical."""
+    import numpy as np
+
+    from repro.core.engine_jax import build_schedule
+
+    B = int(os.environ.get("REPRO_BENCH_TRIALS", "256"))
+    T = 400
+    specs = [
+        TrialSpec(byz=(2, 5), attack="drift", q=0.2, steps=T, seed=s,
+                  n_data=64, d=1024, label=f"s{s}")
+        for s in range(B)
+    ]
+    vec = build_schedule(specs, "vector")      # warm numpy caches
+    prx = build_schedule(specs, "proxy")
+    parity = all(np.array_equal(vec.arrays[k], prx.arrays[k])
+                 for k in prx.arrays)
+    t_vec = t_prx = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        build_schedule(specs, "proxy")
+        t_prx = min(t_prx, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        build_schedule(specs, "vector")
+        t_vec = min(t_vec, time.perf_counter() - t0)
+    speedup = t_prx / t_vec
+    detail = {
+        "trials": B, "steps": T,
+        "proxy_s": t_prx, "vector_s": t_vec, "speedup": speedup,
+        "arrays_identical": parity,
+    }
+    _dump("schedule_build", detail)
+    return [
+        ("schedule[proxy_replay]", t_prx * 1e6, f"{t_prx*1e3:.0f}ms"),
+        ("schedule[vector_replay]", t_vec * 1e6, f"{t_vec*1e3:.0f}ms"),
+        ("schedule[speedup]", 0.0, f"{speedup:.1f}x"),
+        ("schedule[target_3x_met]", 0.0, str(speedup >= 3.0)),
+        ("schedule[arrays_identical]", 0.0, str(parity)),
+    ]
+
+
+_DEVICES_SNIPPET = """
+import json, os, time
+import numpy as np
+from repro.core.engine import TrialSpec, run_batch
+from repro.sharding import trials_mesh
+import jax
+
+B, d, steps = 64, 1 << 16, 3
+specs = [TrialSpec(byz=(2, 5), attack="drift", q=0.2, steps=steps, seed=s,
+                   n_data=64, d=d) for s in range(B)]
+mesh = trials_mesh()
+out = {"devices": len(jax.devices()),
+       "mesh": None if mesh is None else int(mesh.devices.size)}
+for label, kw in (("unsharded", {"mesh": None}), ("sharded", {"mesh": mesh})):
+    if label == "sharded" and mesh is None:
+        continue
+    run_batch(specs, backend="jax", **kw)            # compile
+    t0 = time.perf_counter()
+    r = run_batch(specs, backend="jax", **kw)
+    out[label + "_s"] = time.perf_counter() - t0
+    out[label + "_trials_per_s"] = B / out[label + "_s"]
+print("DEVJSON " + json.dumps(out))
+"""
+
+
+def engine_devices() -> list[tuple]:
+    """Device-scaling smoke for the sharded engine: the same 64-trial
+    drift sweep (d = 2^16) unsharded vs sharded over a forced 8-device
+    host mesh, in a subprocess with its own XLA_FLAGS.  On CPU the
+    emulated devices share the same cores, so this records throughput
+    (and proves the sharded path end-to-end) without asserting a
+    speedup — on real TPU/GPU meshes the sharded column scales."""
+    import json as _json
+    import subprocess
+    import sys as _sys
+
+    env = {**os.environ,
+           "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": os.pathsep.join(
+               [p for p in _sys.path if p] +
+               [os.environ.get("PYTHONPATH", "")])}
+    proc = subprocess.run([_sys.executable, "-c", _DEVICES_SNIPPET],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    line = next((ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("DEVJSON ")), None)
+    if line is None:
+        raise RuntimeError(f"devices bench failed: {proc.stderr[-2000:]}")
+    detail = _json.loads(line[len("DEVJSON "):])
+    _dump("engine_devices", detail)
+    rows = [("devices[count]", 0.0, str(detail["devices"]))]
+    for label in ("unsharded", "sharded"):
+        if label + "_s" in detail:
+            rows.append((f"devices[{label}]", detail[label + "_s"] * 1e6,
+                         f"{detail[label + '_trials_per_s']:.1f}trials/s"))
+    return rows
+
+
 def fig2_code() -> list[tuple]:
     import jax
     import jax.numpy as jnp
@@ -312,4 +421,5 @@ def _dump(name: str, obj) -> None:
 
 
 ALL = [efficiency_vs_q, scheme_comparison, identification_time,
-       adaptive_trace, engine_speedup, fig2_code]
+       adaptive_trace, engine_speedup, schedule_build, engine_devices,
+       fig2_code]

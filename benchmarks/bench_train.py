@@ -22,8 +22,9 @@ from repro.train import AttackConfig, StepConfig, Trainer, TrainerConfig
 
 
 def train_paths() -> list[tuple]:
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_config("paper-smalllm").reduced()
     opt = OptConfig(kind="adamw", peak_lr=1e-3, warmup_steps=2,
                     total_steps=100)

@@ -17,25 +17,33 @@ import traceback
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def write_bench_engine() -> None:
-    """Summarize the engine benchmarks into BENCH_engine.json (repo root).
-
-    Tracked fields: the serial->engine speedup (engine_speedup) and the
-    numpy-engine->jax-backend d sweep (backend_sweep), with parity bits.
-    """
-    # _dump() in the bench modules writes cwd-relative; prefer that copy
-    # (freshest when run from the repo root) and fall back to the
-    # repo-root copy so out-of-tree invocations don't silently stale
-    # BENCH_engine.json
+def _load_bench(name: str):
+    """Load a results/bench artifact, preferring the cwd-relative copy
+    (_dump() writes cwd-relative; freshest when run from the repo root)
+    with the repo-root copy as a fallback for out-of-tree invocations."""
     candidates = [
-        os.path.join("results", "bench", "engine_speedup.json"),
-        os.path.join(_REPO_ROOT, "results", "bench", "engine_speedup.json"),
+        os.path.join("results", "bench", f"{name}.json"),
+        os.path.join(_REPO_ROOT, "results", "bench", f"{name}.json"),
     ]
     src = next((p for p in candidates if os.path.exists(p)), None)
     if src is None:
-        return
+        return None
     with open(src) as fh:
-        data = json.load(fh)
+        return json.load(fh)
+
+
+def write_bench_engine() -> None:
+    """Summarize the engine benchmarks into BENCH_engine.json (repo root).
+
+    Tracked fields: the serial->engine speedup (engine_speedup), the
+    numpy-engine->jax-backend d sweep (backend_sweep) with parity bits,
+    the control-plane schedule-build column (vectorized replay vs the
+    full-engine proxy replay), and the multi-device scaling smoke
+    (unsharded vs 8-device-sharded trial batches).
+    """
+    data = _load_bench("engine_speedup")
+    if data is None:
+        return
     sweep = data.get("backend_sweep", [])
     summary = {
         "serial_vs_engine": {
@@ -54,6 +62,15 @@ def write_bench_engine() -> None:
             r["speedup"] >= 3.0 for r in sweep if r["d"] >= 1 << 20
         ) if any(r["d"] >= 1 << 20 for r in sweep) else None,
     }
+    sched = _load_bench("schedule_build")
+    if sched is not None:
+        summary["schedule_build"] = {
+            **sched,
+            "target_3x_met": sched.get("speedup", 0.0) >= 3.0,
+        }
+    devices = _load_bench("engine_devices")
+    if devices is not None:
+        summary["devices_scaling"] = devices
     with open(os.path.join(_REPO_ROOT, "BENCH_engine.json"), "w") as fh:
         json.dump(summary, fh, indent=1)
         fh.write("\n")

@@ -59,8 +59,9 @@ def main() -> None:
 
     n = len(jax.devices())
     assert n >= 2 * args.f + 1, f"need >= {2*args.f+1} workers, have {n}"
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import make_mesh
+
+    mesh = make_mesh((n, 1), ("data", "model"))
     cfg = build_cfg(args.preset)
     seq = args.seq_len or (64 if args.preset == "smoke" else 512)
 

@@ -32,8 +32,9 @@ from repro.train import AttackConfig, StepConfig, Trainer, TrainerConfig
 
 def make_trainer(ckpt_dir: str) -> Trainer:
     n = len(jax.devices())
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import make_mesh
+
+    mesh = make_mesh((n, 1), ("data", "model"))
     return Trainer(
         get_config("paper-smalllm").reduced(),
         OptConfig(kind="adamw", peak_lr=1e-3, warmup_steps=5, total_steps=100),

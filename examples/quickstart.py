@@ -35,9 +35,10 @@ def main() -> None:
     from repro.optim import OptConfig
     from repro.train import AttackConfig, StepConfig, Trainer, TrainerConfig
 
+    from repro.sharding import make_mesh
+
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((n_dev, 1), ("data", "model"))
     cfg = get_config("paper-smalllm").reduced()
     trainer = Trainer(
         cfg,

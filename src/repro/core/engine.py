@@ -961,6 +961,368 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
 
 
 # ---------------------------------------------------------------------------
+# Vectorized control-plane replay
+# ---------------------------------------------------------------------------
+
+# attacks whose detectability never depends on gradient magnitudes: they
+# perturb by a fixed nonzero offset ("drift", "noise") or never perturb
+# ("none"), so WHO gets caught is a pure function of the tamper/assignment
+# coin flips.  "sign_flip"/"scale"/"zero" scale the gradient itself and
+# become undetectable exactly at the convergence floor.
+VALUE_INDEPENDENT_ATTACKS = frozenset({"none", "drift", "noise"})
+
+
+def value_independent_control(spec: TrialSpec) -> bool:
+    """True when the trial's control flow (check decisions, detection
+    outcomes, identified sets) does not depend on gradient values, i.e.
+    the schedule can be replayed without running the data plane at all.
+    The jax backend's ``proxy_schedulable`` is the same predicate."""
+    if spec.q is None and spec.mode == "randomized":
+        return False          # adaptive q*_t depends on the observed loss
+    if not spec.byz:
+        return True           # nothing ever tampers -> nothing to detect
+    if spec.mode in ("none",) or spec.mode.startswith("filter"):
+        return True           # no detection phase at all
+    return isinstance(spec.attack, str) \
+        and spec.attack in VALUE_INDEPENDENT_ATTACKS
+
+
+def replay_control_fast(specs: list[TrialSpec],
+                        recorder: "ScheduleRecorder | None" = None,
+                        ) -> BatchResult:
+    """Control-plane-only replay: the numpy engine's exact state machine
+    with the data plane deleted.
+
+    Valid only when every trial is ``value_independent_control``.  The
+    replay consumes the identical RNG streams (decide coins, tamper
+    draws, assignment permutations) in the identical order, so the
+    recorded schedule and the control results — efficiency meters,
+    identify steps, q-traces, active/identified sets — are EXACTLY what
+    ``run_batch(proxy_specs, _recorder=...)`` produces, at O(B·T·n) cost
+    with no matmuls, no gradient buffers and no per-check gradient
+    staging.  Detection is decided analytically: a replica group
+    mismatches iff its membership mixes tampered and honest workers
+    (affine attacks act identically on identical shard copies), and a
+    majority vote flags the group's minority side.
+
+    Results carry control quantities only: ``w``/``w_true`` are empty
+    and ``losses`` is ``[]`` — the caller (the jax backend) recomputes
+    all float quantities on device.
+    """
+    from repro.core.simulation import SimResult
+
+    t_start = time.perf_counter()
+    specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
+    bad = [s.label or i for i, s in enumerate(specs)
+           if not value_independent_control(s)]
+    if bad:
+        raise ValueError(
+            f"control-only replay invalid for value-dependent trials: {bad}")
+    B = len(specs)
+    if B == 0:
+        return BatchResult([], [], 0.0)
+
+    cfgs = []
+    for s in specs:
+        bft_mode = "filter" if s.mode.startswith("filter") else s.mode
+        cfgs.append(BFTConfig(n=s.n, f=s.f, mode=bft_mode, q=s.q,
+                              p_assumed=s.p_tamper, selective=s.selective,
+                              seed=s.seed))
+    bstate = BatchedProtocolState(cfgs)
+    n_max = bstate.n_max
+    trials = [_Trial(s, bstate.trial(b)) for b, s in enumerate(specs)]
+    streams = _TamperStreams(specs, trials)
+    for tr in trials:
+        tr.act_idx = np.flatnonzero(tr.st.active)
+
+    steps_arr = np.array([s.steps for s in specs])
+    T_max = int(steps_arr.max()) if B else 0
+
+    is_decider = np.array([s.mode in ("deterministic", "randomized")
+                           for s in specs])
+    is_selective = np.array([s.selective and bool(is_decider[b])
+                             for b, s in enumerate(specs)])
+    is_vec = is_decider & ~is_selective
+    u_mat = np.zeros((B, T_max))
+    for b, s in enumerate(specs):
+        if is_vec[b] and s.steps:
+            u_mat[b, :s.steps] = bstate.trial(b).decide_rng.random(s.steps)
+    q_eff = np.array([_q_fixed(s, s.f) if is_vec[b] else 0.0
+                      for b, s in enumerate(specs)])
+    vec_idx = np.flatnonzero(is_vec)
+    selective_idx = np.flatnonzero(is_selective)
+    filter_trials = np.flatnonzero(
+        [s.mode.startswith("filter") for s in specs])
+    draco_trials = [b for b, s in enumerate(specs) if s.mode == "draco"]
+    draco_mask = np.zeros(B, bool)
+    draco_mask[draco_trials] = True
+    has_byz = [b for b, s in enumerate(specs) if s.byz]
+    has_events = [b for b, s in enumerate(specs) if s.events]
+    # does the trial's attack change a tampered gradient at all?
+    perturbs = np.array([bool(s.byz) and s.attack != "none" for s in specs])
+
+    used_acc = np.zeros(B, np.int64)
+    comp_acc = np.zeros(B, np.int64)
+    check_acc = np.zeros(B, np.int64)
+    ident_acc = np.zeros(B, np.int64)
+    eff_hist = np.zeros((B, T_max))
+    q_trace_mat = np.zeros((B, T_max))
+    last_q = np.zeros(B)
+
+    f_t_arr = np.array([s.f for s in specs])
+    uniform_steps = bool((steps_arr == T_max).all())
+    vec_all = bool(is_vec.all())
+
+    fast_cache = fast_assignment_batched(bstate.active)
+    n_active = bstate.active.sum(axis=1)
+    dirty_trials: list[int] = []
+    live_const = np.ones(B, bool)
+
+    # shared read-only templates for identify-free / tamper-free steps:
+    # np.stack in build_schedule copies values out per step, so recording
+    # the same (never-mutated) array many times is safe and saves four
+    # (B, n) allocations on the common step
+    zero_sh2 = np.zeros((B, n_max), np.int32)
+    zero_gr2 = np.full((B, n_max), -1, np.int32)
+    zero_m2 = np.ones(B, np.int64)
+    zero_tam = np.zeros((B, n_max), bool)
+    zero_ident = np.zeros(B, bool)
+    for a in (zero_sh2, zero_gr2, zero_m2, zero_tam, zero_ident):
+        a.setflags(write=False)
+
+    def _vote_minority(members: np.ndarray, tam_row: np.ndarray) -> set:
+        """Majority-vote faulty set over (m, r) replica groups, decided
+        combinatorially: within a group every tampered replica equals
+        every other tampered one and every honest replica equals every
+        other honest one, so the vote flags whichever side is the strict
+        minority (odd r => no ties)."""
+        hit = tam_row[members]                       # (m, r) bool
+        cnt = hit.sum(axis=1)
+        r = members.shape[1]
+        newly: set[int] = set()
+        for g in range(members.shape[0]):
+            if 0 < cnt[g]:
+                flag = hit[g] if cnt[g] <= r // 2 else ~hit[g]
+                newly |= {int(w) for w in members[g][flag]}
+        return newly
+
+    for t in range(T_max):
+        if uniform_steps:
+            live, live_all = live_const, True
+        else:
+            live = steps_arr > t
+            live_all = bool(live.all())
+
+        rec_sh2 = rec_gr2 = rec_m2 = rec_tam2 = None   # allocated on use
+
+        for b in has_events:
+            if live[b]:
+                for ev in trials[b].events_by_step.get(t, ()):
+                    ws = np.asarray(ev.workers)
+                    if ev.kind == "crash":
+                        trials[b].st.on_crash(ws)
+                    else:
+                        trials[b].st.on_recover(ws)
+                    dirty_trials.append(b)
+
+        if dirty_trials:
+            fast_cache = fast_assignment_batched(
+                bstate.active | ~live[:, None])
+            n_active = (bstate.active & live[:, None]).sum(axis=1)
+            streams.refresh(only=dirty_trials)
+            for b in dirty_trials:
+                trials[b].act_idx = np.flatnonzero(trials[b].st.active)
+            dirty_trials = []
+
+        # -- check decisions (no losses: every trial is loss-independent)
+        if vec_all:
+            checks = u_mat[:, t] < q_eff
+            last_q[:] = q_eff
+        else:
+            checks = np.zeros(B, bool)
+            if vec_idx.size:
+                checks[vec_idx] = u_mat[vec_idx, t] < q_eff[vec_idx]
+                last_q[vec_idx] = q_eff[vec_idx]
+            for b in selective_idx:
+                if live[b]:
+                    checks[b] = trials[b].st.decide_check(None)
+                    last_q[b] = trials[b].st.last_q
+        if not live_all:
+            checks &= live
+        q_trace_mat[:, t] = last_q
+
+        # -- phase-1 assignments (same copy-on-write layout as run_batch)
+        check_idx = np.flatnonzero(checks)
+        if check_idx.size or draco_trials:
+            batch_a = BatchedAssignment(
+                fast_cache.shard_of_worker.copy(),
+                fast_cache.group_of_worker.copy(),
+                fast_cache.weight.copy(),
+                fast_cache.num_shards.copy(),
+            )
+            for b in check_idx:
+                tr = trials[b]
+                r1 = max(1, int(f_t_arr[b])) + 1
+                m1, mem = _grouped_rows_into(batch_a, b, tr.act_idx, r1,
+                                             tr.st.rng)
+                tr.m1, tr.r1, tr.mem1 = m1, r1, mem
+            for b in draco_trials:
+                if live[b]:
+                    tr, s = trials[b], specs[b]
+                    r1 = 2 * max(1, s.f) + 1
+                    m1, mem = _grouped_rows_into(batch_a, b, tr.act_idx, r1,
+                                                 tr.st.rng)
+                    tr.m1, tr.r1, tr.mem1 = m1, r1, mem
+        else:
+            batch_a = fast_cache
+
+        is_fast = np.ones(B, bool)
+        is_fast[check_idx] = False
+        for b in draco_trials:
+            is_fast[b] = False
+
+        if live_all:
+            group_all = batch_a.group_of_worker
+        else:
+            group_all = np.where(live[:, None], batch_a.group_of_worker, -1)
+        shard_all = batch_a.shard_of_worker
+        m_all = batch_a.num_shards
+
+        # -- Byzantine tampering (phase 1), decision bits only ------------
+        hits = streams.phase1_hits(t, live) if has_byz else None
+        if hits is None:
+            tam1 = zero_tam
+        else:
+            tam1 = np.zeros((B, n_max), bool)
+            tam1[hits[0], hits[1]] = True
+
+        # -- verdicts, decided analytically -------------------------------
+        all_fast = not check_idx.size and not draco_trials \
+            and not filter_trials.size
+        if all_fast and live_all:
+            # steady state (post-identification long tail): every trial
+            # is a live fast step — record the shared cache rows as-is
+            used_t, comp_t = m_all, n_active
+            identified_t = zero_ident
+            agg_weight = batch_a.weight
+        else:
+            fast_live = is_fast if live_all else (is_fast & live)
+            used_t = np.where(fast_live, m_all, 0)
+            comp_t = np.where(fast_live, n_active, 0)
+            identified_t = np.zeros(B, bool)
+            agg_weight = np.where(fast_live[:, None], batch_a.weight,
+                                  np.float32(0.0))
+
+        for b in draco_trials:
+            if not live[b]:
+                continue
+            tr = trials[b]
+            used_t[b] = tr.m1
+            comp_t[b] = tr.m1 * tr.r1
+            if perturbs[b]:
+                for w_id in sorted(_vote_minority(tr.mem1, tam1[b])):
+                    tr.ident_step.setdefault(int(w_id), t)
+
+        for b in check_idx:
+            tr, st, s = trials[b], trials[b].st, specs[b]
+            used_t[b] = tr.m1
+            comp_t[b] = tr.m1 * tr.r1
+            # replica mismatch iff some group mixes tampered + honest
+            hit = tam1[b][tr.mem1]                       # (m, r)
+            cnt = hit.sum(axis=1)
+            if perturbs[b] and bool(((0 < cnt) & (cnt < tr.r1)).any()):
+                identified_t[b] = True
+                ai, mem_i = _grouped_rows(s.n, tr.act_idx,
+                                          2 * max(1, int(f_t_arr[b])) + 1,
+                                          st.rng)
+                tam = streams.phase2_hits(b, t)
+                tam2_row = np.zeros(n_max, bool)
+                if tam:
+                    tam2_row[tam] = True
+                if recorder is not None:
+                    if rec_sh2 is None:
+                        rec_sh2 = zero_sh2.copy()
+                        rec_gr2 = zero_gr2.copy()
+                        rec_m2 = zero_m2.copy()
+                        rec_tam2 = zero_tam.copy()
+                    k = len(ai.shard_of_worker)
+                    rec_sh2[b, :k] = ai.shard_of_worker
+                    rec_gr2[b, :k] = ai.group_of_worker
+                    rec_m2[b] = ai.num_shards
+                    if tam:
+                        rec_tam2[b, tam] = True
+                used_t[b] += ai.num_shards
+                comp_t[b] += ai.num_shards * ai.replication
+                newly = _vote_minority(mem_i, tam2_row)
+                if newly:
+                    st.on_identified(np.asarray(sorted(newly)))
+                    for w_id in newly:
+                        tr.ident_step[w_id] = t
+                    f_t_arr[b] = max(0, s.f - st.kappa)
+                    dirty_trials.append(b)
+                    if is_vec[b]:
+                        q_eff[b] = _q_fixed(s, int(f_t_arr[b]))
+                agg_weight[b] = 0.0
+            else:
+                st.on_clean_check(tr.mem1.ravel())
+                agg_weight[b] = batch_a.weight[b]
+
+        for b in filter_trials:
+            if live[b]:
+                agg_weight[b] = 0.0
+
+        if recorder is not None:
+            # unlike run_batch, nothing here mutates a recorded array
+            # after its step (assignment rows are copy-on-write; checks /
+            # weights / tam are fresh per step), so only the genuinely
+            # in-place-updated active mask needs a snapshot — the stack
+            # in build_schedule copies values out anyway
+            recorder.on_step(
+                live=live, checks=checks,
+                vote1=(draco_mask & live),
+                shard1=shard_all, group1=group_all,
+                m1=np.asarray(m_all, np.int64),
+                aggw=agg_weight, tam1=tam1,
+                identify=identified_t,
+                shard2=zero_sh2 if rec_sh2 is None else rec_sh2,
+                group2=zero_gr2 if rec_gr2 is None else rec_gr2,
+                m2=zero_m2 if rec_m2 is None else rec_m2,
+                tam2=zero_tam if rec_tam2 is None else rec_tam2,
+                active=bstate.active.copy(),
+            )
+
+        used_acc += used_t
+        comp_acc += comp_t
+        check_acc += (checks | draco_mask) & live
+        ident_acc += identified_t
+        eff_hist[:, t] = used_t / np.maximum(1, comp_t)
+
+    # -- materialize control results (no float quantities) ----------------
+    empty = np.zeros(0)
+    results = []
+    for b, s in enumerate(specs):
+        tr, st = trials[b], trials[b].st
+        st.step = s.steps
+        meter = st.meter
+        meter.used = int(used_acc[b])
+        meter.computed = int(comp_acc[b])
+        meter.iterations = s.steps
+        meter.check_iterations = int(check_acc[b])
+        meter.identify_iterations = int(ident_acc[b])
+        meter.history = eff_hist[b, :s.steps].tolist()
+        st.last_q = float(q_trace_mat[b, s.steps - 1]) if s.steps else 0.0
+        results.append(SimResult(
+            w=empty,
+            w_true=empty,
+            state=st,
+            losses=[],
+            q_trace=q_trace_mat[b, :s.steps].tolist(),
+            identify_step=tr.ident_step,
+        ))
+    return BatchResult(specs, results, time.perf_counter() - t_start)
+
+
+# ---------------------------------------------------------------------------
 # Declarative scenario matrices
 # ---------------------------------------------------------------------------
 

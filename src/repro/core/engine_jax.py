@@ -5,16 +5,18 @@
 (repro.core.engine) stays the parity oracle; this backend splits the
 protocol into
 
- * a **control plane** on the host: the numpy engine's own state machine
-   replayed once with a ``ScheduleRecorder`` to produce dense per-step
-   schedule arrays — check decisions, assignment layouts, tamper hits
-   (both phases), identify events and their 2f+1 assignments,
-   aggregation weights, live/active masks.  Control flow for the
-   paper's fixed-q protocol classes is *value-independent* (detection
-   outcomes depend only on WHO tampered, not on gradient magnitudes,
-   for always-detectable attacks), so the control replay runs on a tiny
-   proxy problem — its cost is O(B·T·n), independent of the gradient
-   dimension d.  Value-dependent classes (adaptive q*, attacks whose
+ * a **control plane** on the host producing dense per-step schedule
+   arrays — check decisions, assignment layouts, tamper hits (both
+   phases), identify events and their 2f+1 assignments, aggregation
+   weights, live/active masks.  Control flow for the paper's fixed-q
+   protocol classes is *value-independent* (detection outcomes depend
+   only on WHO tampered, not on gradient magnitudes, for
+   always-detectable attacks), so the schedule comes from the
+   vectorized control-only replay (engine.replay_control_fast, mode
+   "vector"): the numpy engine's exact RNG streams and state machine
+   with the data plane deleted — O(B·T·n), no matmuls.  The tiny-proxy
+   full-engine replay is kept as mode "proxy" (the parity oracle for
+   "vector").  Value-dependent classes (adaptive q*, attacks whose
    detectability vanishes at the convergence floor) replay on the real
    problem instead ("oracle" schedule) — exact, but the replay then
    costs one numpy-engine pass;
@@ -33,7 +35,13 @@ protocol into
    same linearity.  The batched Pallas kernels (repro.kernels.ops
    ``batched_*``: Mosaic on TPU, ref-equivalent XLA elsewhere) do the
    sketching, the symbol-domain vote agreement, and the per-trial
-   encodes.
+   encodes.  The trial batch shards over a 1-D ``("trials",)`` device
+   mesh (repro.sharding.trials_mesh; ``mesh="auto"`` uses every local
+   device) via shard_map — trials are embarrassingly parallel, so the
+   scan body needs no collectives and the kernels see local shards —
+   and chunks stream through an async donated-buffer pipeline (H2D of
+   chunk k+1 overlapped with compute of chunk k, one host sync at the
+   end).  See docs/performance.md § Multi-device scaling.
 
 Parity contract (tests/test_engine_parity.py, docs/performance.md):
 control quantities — efficiency counters, check/identify schedules,
@@ -84,7 +92,12 @@ AFFINE_ATTACKS: dict[str, tuple[float, float, float]] = {
 # 1e-9 replica compare), "none" never perturbs.  "sign_flip"/"scale"/
 # "zero" scale the gradient itself — undetectable exactly at the
 # convergence floor — so their detection trace is value-dependent.
-_VALUE_INDEPENDENT_ATTACKS = frozenset({"none", "drift", "noise"})
+# (Canonical definition lives in engine.VALUE_INDEPENDENT_ATTACKS.)
+from repro.core.engine import (  # noqa: E402  (grouped with engine imports)
+    VALUE_INDEPENDENT_ATTACKS as _VALUE_INDEPENDENT_ATTACKS,
+    replay_control_fast,
+    value_independent_control,
+)
 
 _FILTER_CODES = {"mean": 0, "median": 1, "krum": 2}
 
@@ -113,17 +126,19 @@ def _is_adaptive(spec: TrialSpec) -> bool:
 
 def proxy_schedulable(spec: TrialSpec) -> bool:
     """True when the trial's control flow is value-independent, i.e. the
-    schedule replay may run on a tiny proxy problem at O(1) cost in d."""
-    if _is_adaptive(spec):
-        return False          # q*_t depends on the observed loss
-    if not spec.byz:
-        return True           # nothing ever tampers -> nothing to detect
-    if spec.mode in ("none",) or spec.mode.startswith("filter"):
-        return True           # no detection phase at all
-    return spec.attack in _VALUE_INDEPENDENT_ATTACKS
+    schedule replay may run on a tiny proxy problem — or skip the data
+    plane entirely (engine.replay_control_fast) — at O(1) cost in d."""
+    return value_independent_control(spec)
 
 
 def _validate(specs: list[TrialSpec]) -> None:
+    dims = {(s.n_data, s.d) for s in specs}
+    if len(dims) > 1:
+        # same contract as the numpy backend (engine.run_batch): a batch
+        # must share problem dimensions — catching it here replaces an
+        # opaque broadcast error in the (B, n_data, d) copy loop below
+        raise ValueError(
+            f"trials must share (n_data, d), got {sorted(dims)}")
     for s in specs:
         if not isinstance(s.attack, str) or s.attack not in AFFINE_ATTACKS:
             raise NotImplementedError(
@@ -153,32 +168,39 @@ class Schedule:
 def build_schedule(specs: list[TrialSpec], mode: str = "auto") -> Schedule:
     """Replay the numpy engine's control machinery into dense arrays.
 
-    mode: "proxy" forces the tiny-problem replay (valid only when every
-    trial is ``proxy_schedulable``), "oracle" forces the real-problem
-    replay, "auto" picks proxy whenever valid.
+    mode: "vector" runs the batched control-only replay
+    (engine.replay_control_fast) — no data plane at all, the fast path
+    for fixed-q value-independent trial classes; "proxy" forces the
+    tiny-problem full-engine replay (same schedule, kept as the parity
+    oracle for "vector"); "oracle" forces the real-problem replay (the
+    only valid choice for value-dependent trials); "auto" picks
+    "vector" whenever valid.
     """
     eligible = all(proxy_schedulable(s) for s in specs)
     if mode == "auto":
-        mode = "proxy" if eligible else "oracle"
-    if mode == "proxy" and not eligible:
+        mode = "vector" if eligible else "oracle"
+    if mode in ("proxy", "vector") and not eligible:
         bad = [s.label or i for i, s in enumerate(specs)
                if not proxy_schedulable(s)]
         raise ValueError(
-            f"proxy schedule invalid for value-dependent trials: {bad}")
-    if mode not in ("proxy", "oracle"):
+            f"{mode} schedule invalid for value-dependent trials: {bad}")
+    if mode not in ("proxy", "oracle", "vector"):
         raise ValueError(f"unknown schedule mode {mode!r}")
 
-    if mode == "proxy":
-        n_data = max(_PROXY_N_DATA, 2 * max(s.n for s in specs))
-        ctrl_specs = [dataclasses.replace(s, n_data=n_data, d=_PROXY_D)
-                      for s in specs]
-    else:
-        ctrl_specs = specs
     rec = ScheduleRecorder()
-    control = run_batch(ctrl_specs, _recorder=rec)
+    if mode == "vector":
+        control = replay_control_fast(specs, rec)
+    else:
+        if mode == "proxy":
+            n_data = max(_PROXY_N_DATA, 2 * max(s.n for s in specs))
+            ctrl_specs = [dataclasses.replace(s, n_data=n_data, d=_PROXY_D)
+                          for s in specs]
+        else:
+            ctrl_specs = specs
+        control = run_batch(ctrl_specs, _recorder=rec)
     keys = rec.steps[0].keys() if rec.steps else ()
     arrays = {k: np.stack([st[k] for st in rec.steps]) for k in keys}
-    return Schedule(arrays, control, mode == "proxy")
+    return Schedule(arrays, control, mode != "oracle")
 
 
 # ---------------------------------------------------------------------------
@@ -250,12 +272,8 @@ def _masked_mean(g, act):
     return (g * act[:, :, None]).sum(axis=1) / cnt[:, None]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("shared", "has_filter", "has_bias", "impl"),
-)
-def _device_scan(A, y, W0, stat, xs, noisevec, pid, *, shared: bool,
-                 has_filter: bool, has_bias: bool, impl: str | None):
+def _scan_core(A, y, W0, stat, xs, com, noisevec, pid, *, shared: bool,
+               has_filter: bool, has_bias: bool, impl: str | None):
     """The fused protocol loop: scan the schedule over iterations.
 
     Every iteration pays only two d-sized contractions (residual and
@@ -307,7 +325,8 @@ def _device_scan(A, y, W0, stat, xs, noisevec, pid, *, shared: bool,
         return jnp.where(tam[:, :, None],
                          alpha[:, None, None] * skw + add, skw)
 
-    def step(W, x):
+    def step(W, xc):
+        x, c = xc
         if shared:
             resid = jnp.einsum("id,bd->bi", A, W) - y[None, :]
         else:
@@ -322,8 +341,8 @@ def _device_scan(A, y, W0, stat, xs, noisevec, pid, *, shared: bool,
         upd = agg_value(x["aggw"], x["tam1"], mask1, cr1)
 
         # -- detection symbols + on-device check verdicts --------------
-        skt1 = symbols(mask1, cr1, x["tam1"], x["SA"], x["sk_one"],
-                       x["sk_noise"])
+        skt1 = symbols(mask1, cr1, x["tam1"], c["SA"], c["sk_one"],
+                       c["sk_noise"])
         fault, _ = detect_groups_batched(skt1, x["group1"], tau=TAU_DETECT)
         det = x["checks"] & fault
 
@@ -334,8 +353,8 @@ def _device_scan(A, y, W0, stat, xs, noisevec, pid, *, shared: bool,
                 if skt is None:
                     mask_, rows_ = _shard_mask(shard, group, m, n_data)
                     cr_ = resid * (2.0 / rows_)[:, None]
-                    skt_ = symbols(mask_, cr_, tam, x["SA"], x["sk_one"],
-                                   x["sk_noise"])
+                    skt_ = symbols(mask_, cr_, tam, c["SA"], c["sk_one"],
+                                   c["sk_noise"])
                 else:
                     mask_, cr_, skt_ = mask, cr, skt
                 gv = jnp.where(gate[:, None], group, -1)
@@ -372,8 +391,81 @@ def _device_scan(A, y, W0, stat, xs, noisevec, pid, *, shared: bool,
         W = jnp.where(x["live"][:, None], W - lr[:, None] * upd, W)
         return W, (loss, det)
 
-    W, (losses, det) = jax.lax.scan(step, W0, xs)
+    W, (losses, det) = jax.lax.scan(step, W0, (xs, com))
     return W, losses, det
+
+
+_device_scan = functools.partial(
+    jax.jit,
+    static_argnames=("shared", "has_filter", "has_bias", "impl"),
+    donate_argnames=("W0", "stat", "xs"),
+)(_scan_core)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: shard the trial batch over a 1-D "trials" mesh
+# ---------------------------------------------------------------------------
+#
+# Trials are embarrassingly parallel — the scan body touches one trial's
+# row everywhere — so the device plane scales out with shard_map over a
+# ("trials",) mesh and NO cross-device collectives inside the scan: each
+# device runs the identical jitted scan on its slice of the batch.  The
+# batched Pallas kernels see per-device local shards (manual mode), so
+# the TPU kernel path needs no sharding rules of its own.
+
+
+def _trial_spec(ndim: int, axis: int | None):
+    """Full-rank PartitionSpec sharding ``axis`` over "trials"."""
+    from jax.sharding import PartitionSpec
+
+    spec: list = [None] * ndim
+    if axis is not None:
+        spec[axis] = "trials"
+    return PartitionSpec(*spec)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_scan(mesh, shared: bool, has_filter: bool, has_bias: bool,
+                  impl: str | None, stat_sig: tuple, xs_sig: tuple,
+                  com_sig: tuple, a_ndim: int):
+    """Build (and cache) the shard_map-wrapped, jitted scan for a mesh.
+
+    The signature tuples carry (key, ndim) pairs so the in_specs trees
+    match the dict pytrees exactly; the cache keys on them plus the jit
+    statics, mirroring _device_scan's cache."""
+    from repro.sharding import shard_map
+
+    in_specs = (
+        _trial_spec(a_ndim, None if shared else 0),        # A
+        _trial_spec(a_ndim - 1, None if shared else 0),    # y
+        _trial_spec(2, 0),                                 # W0
+        {k: _trial_spec(nd, 0) for k, nd in stat_sig},
+        {k: _trial_spec(nd, 1) for k, nd in xs_sig},       # (T, B, ...)
+        {k: _trial_spec(nd, None) for k, nd in com_sig},   # replicated
+        _trial_spec(1, None),                              # noisevec
+        _trial_spec(1, 0),                                 # pid
+    )
+    out_specs = (_trial_spec(2, 0), _trial_spec(2, 1), _trial_spec(2, 1))
+    body = functools.partial(_scan_core, shared=shared,
+                             has_filter=has_filter, has_bias=has_bias,
+                             impl=impl)
+    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                   axis_names={"trials"}, check_vma=False)
+    return jax.jit(fn, donate_argnums=(2, 3, 4)), in_specs
+
+
+def _pad_rows(arr: np.ndarray, axis: int, pad: int, fill=0) -> np.ndarray:
+    """Pad ``arr`` with ``fill`` along ``axis`` (idle-trial padding)."""
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return np.pad(arr, widths, constant_values=fill)
+
+
+# per-array padding fill values: -1 marks idle workers / no-filter rows,
+# everything else pads to an inert zero trial (live=False, weights 0)
+_PAD_FILL = {"group1": -1, "group2": -1, "fcode": -1, "farr": 1}
 
 
 # ---------------------------------------------------------------------------
@@ -383,14 +475,27 @@ def _device_scan(A, y, W0, stat, xs, noisevec, pid, *, shared: bool,
 
 def run_batch_jax(specs, *, schedule: str = "auto",
                   kernel_impl: str | None = None,
-                  chunk_trials: int | None = None) -> BatchResult:
+                  chunk_trials: int | None = None,
+                  mesh="auto") -> BatchResult:
     """Run B protocol trials with the jitted on-device data plane.
 
-    schedule: "auto" | "proxy" | "oracle" (see ``build_schedule``).
+    schedule: "auto" | "vector" | "proxy" | "oracle" (see
+        ``build_schedule``).
     kernel_impl: None (auto: Pallas on TPU, XLA elsewhere) | "pallas" |
         "xla" — forwarded to the batched kernel ops.
     chunk_trials: trials per device pass (default: memory-sized; only
         filter trials materialize a (chunk, n, d) gradient stack).
+        Rounded up to a multiple of the mesh size; the last chunk is
+        padded with inert trials and the padding sliced off the results.
+    mesh: "auto" shards the trial batch over all local devices
+        (repro.sharding.trials_mesh 1-D "trials" mesh; single-device
+        hosts fall back to plain jit); None forces single-device; or an
+        explicit 1-D Mesh whose axis is named "trials".
+
+    Chunks flow through an async pipeline: each chunk's schedule arrays
+    are device_put (H2D) while the previous chunk's scan is still
+    executing, and nothing synchronizes with the host until every chunk
+    has been dispatched.
 
     The returned ``BatchResult`` additionally carries ``schedule`` (the
     control plane) and ``detect_flags`` (T, B) — the scan's on-device
@@ -412,8 +517,12 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     if not sched.arrays:
         # every trial has steps == 0: nothing to scan, and a proxy
         # control pass would carry proxy-problem iterates — rerun the
-        # numpy engine on the real specs (free at zero steps)
-        return run_batch(specs)
+        # numpy engine on the real specs (free at zero steps), keeping
+        # the documented jax-backend extras attached (empty here)
+        out = run_batch(specs)
+        out.detect_flags = np.zeros((0, B), bool)
+        out.schedule = sched
+        return out
     T = len(sched.arrays["live"])
     n_max = sched.arrays["shard1"].shape[2]
 
@@ -431,8 +540,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     first = problems[pkeys[0]]
     n_data, d = first[0].shape
     if shared:
-        A = jnp.asarray(first[0], jnp.float32)
-        y = jnp.asarray(first[1], jnp.float32)
+        A_np = np.asarray(first[0], np.float32)
+        y_np = np.asarray(first[1], np.float32)
         w_true = [first[2]] * B
     else:
         A_np = np.empty((B, n_data, d), np.float32)
@@ -442,7 +551,6 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             Ab, yb, wt = problems[(s.problem_seed, s.n_data, s.d)]
             A_np[b], y_np[b] = Ab, yb
             w_true.append(wt)
-        A, y = jnp.asarray(A_np), jnp.asarray(y_np)
 
     # -- per-trial statics ------------------------------------------------
     abn = np.array([AFFINE_ATTACKS[s.attack] for s in specs], np.float32)
@@ -494,28 +602,113 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         "sk_noise": sk_rows[:, -1],
     }
 
+    # -- trials mesh: shard the batch dimension across local devices ------
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"unknown mesh option {mesh!r}")
+        from repro.sharding import trials_mesh
+
+        mesh = trials_mesh()
+    if mesh is not None and tuple(mesh.axis_names) != ("trials",):
+        raise ValueError(
+            f"engine mesh must be 1-D ('trials',), got {mesh.axis_names}")
+    ndev = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+
     # -- chunk trials to bound scan memory: only filter trials ever
     #    materialize a (chunk, n, d) gradient stack ------------------------
     if chunk_trials is None:
         per_trial = n_max * d if has_filter else 4 * d
-        chunk_trials = max(1, min(B, (2 * _CHUNK_ELEMS) // max(1, per_trial)))
+        chunk_trials = max(1, min(B, (2 * _CHUNK_ELEMS * ndev)
+                                  // max(1, per_trial)))
+    elif chunk_trials < 1:
+        raise ValueError(f"chunk_trials must be >= 1, got {chunk_trials}")
+    chunk_trials = int(chunk_trials)
+    if mesh is not None:
+        chunk_trials = -(-chunk_trials // ndev) * ndev
+
+    # -- scan fn + device placement of the chunk-invariant operands -------
+    if mesh is None:
+        scan_fn = functools.partial(
+            _device_scan, shared=shared, has_filter=has_filter,
+            has_bias=has_bias, impl=kernel_impl)
+        # non-shared problems upload per-chunk slices in _stage — a full
+        # (B, n_data, d) upfront copy would defeat the chunk memory bound
+        A_dev = jnp.asarray(A_np) if shared else None
+        y_dev = jnp.asarray(y_np) if shared else None
+        com_dev = common
+        noise_dev = jnp.asarray(noisevec)
+        in_specs = None
+    else:
+        stat_sig = tuple((k, v.ndim) for k, v in sorted(stat_np.items()))
+        xs_sig = tuple((k, v.ndim) for k, v in sorted(xs_np.items()))
+        com_sig = tuple((k, int(v.ndim)) for k, v in sorted(common.items()))
+        scan_fn, in_specs = _sharded_scan(
+            mesh, shared, has_filter, has_bias, kernel_impl,
+            stat_sig, xs_sig, com_sig, A_np.ndim)
+        from jax.sharding import NamedSharding
+
+        ns = lambda spec: NamedSharding(mesh, spec)              # noqa: E731
+        put = lambda tree, spec: jax.device_put(                 # noqa: E731
+            tree, jax.tree.map(ns, spec))
+        A_dev = put(A_np, in_specs[0]) if shared else None
+        y_dev = put(y_np, in_specs[1]) if shared else None
+        com_dev = put(common, in_specs[5])
+        noise_dev = put(noisevec, in_specs[6])
+
+    def _stage(lo: int):
+        """H2D-transfer one chunk's per-trial arrays (async)."""
+        hi = min(lo + chunk_trials, B)
+        bs = hi - lo
+        pad = (-bs) % ndev
+        xs_c = {k: _pad_rows(v[:, lo:hi], 1, pad, _PAD_FILL.get(k, 0))
+                for k, v in xs_np.items()}
+        stat_c = {k: _pad_rows(v[lo:hi], 0, pad, _PAD_FILL.get(k, 0))
+                  for k, v in stat_np.items()}
+        W0 = np.zeros((bs + pad, d), np.float32)
+        pid_c = _pad_rows(pid_np[lo:hi], 0, pad)
+        if mesh is None:
+            args = (A_dev if shared else jnp.asarray(A_np[lo:hi]),
+                    y_dev if shared else jnp.asarray(y_np[lo:hi]),
+                    jnp.asarray(W0),
+                    {k: jnp.asarray(v) for k, v in stat_c.items()},
+                    {k: jnp.asarray(v) for k, v in xs_c.items()},
+                    com_dev, noise_dev, jnp.asarray(pid_c))
+        else:
+            A_c = A_dev if shared else put(
+                _pad_rows(A_np[lo:hi], 0, pad), in_specs[0])
+            y_c = y_dev if shared else put(
+                _pad_rows(y_np[lo:hi], 0, pad), in_specs[1])
+            args = (A_c, y_c, put(W0, in_specs[2]),
+                    put(stat_c, in_specs[3]), put(xs_c, in_specs[4]),
+                    com_dev, noise_dev, put(pid_c, in_specs[7]))
+        return slice(lo, hi), bs, args
+
+    # -- async chunk pipeline, depth 1: dispatch chunk k's scan, start
+    #    chunk k+1's H2D while it executes, then drain chunk k-1 before
+    #    staging k+2 — so at most two chunks' buffers are ever resident
+    #    and the chunk_trials memory bound holds ------------------------
     W = np.empty((B, d), np.float64)
     losses = np.empty((T, B))
     det = np.empty((T, B), bool)
-    for lo in range(0, B, chunk_trials):
-        sl = slice(lo, min(lo + chunk_trials, B))
-        xs = {k: jnp.asarray(v[:, sl]) for k, v in xs_np.items()}
-        xs.update(common)
-        stat = {k: jnp.asarray(v[sl]) for k, v in stat_np.items()}
-        Wc, lc, dc = _device_scan(
-            A if shared else A[sl], y if shared else y[sl],
-            jnp.zeros((sl.stop - lo, d), jnp.float32), stat, xs,
-            jnp.asarray(noisevec), jnp.asarray(pid_np[sl]),
-            shared=shared, has_filter=has_filter,
-            has_bias=has_bias, impl=kernel_impl)
-        W[sl] = np.asarray(Wc, np.float64)
-        losses[:, sl] = np.asarray(lc, np.float64)
-        det[:, sl] = np.asarray(dc)
+
+    def _drain(sl, bs, out):                     # gathers; blocks
+        Wc, lc, dc = out
+        W[sl] = np.asarray(Wc, np.float64)[:bs]
+        losses[:, sl] = np.asarray(lc, np.float64)[:, :bs]
+        det[:, sl] = np.asarray(dc)[:, :bs]
+
+    staged = _stage(0)
+    inflight = None
+    while staged is not None:
+        sl, bs, args = staged
+        out = scan_fn(*args)                     # async dispatch
+        nxt = sl.stop if sl.stop < B else None
+        staged = _stage(nxt) if nxt is not None else None
+        if inflight is not None:
+            _drain(*inflight)                    # backpressure point
+        inflight = (sl, bs, out)
+    if inflight is not None:
+        _drain(*inflight)
 
     # -- materialize results: control plane + device values ---------------
     from repro.core.simulation import SimResult

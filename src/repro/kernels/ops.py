@@ -11,6 +11,13 @@ mode off-TPU — correct but slow, used by CI to keep the kernel path
 alive on CPU runners), ``"xla"`` is the pure-jnp fallback built on the
 ref.py definitions.  ``impl=None`` auto-selects: Pallas on TPU, XLA
 everywhere else.  ``REPRO_KERNEL_IMPL`` overrides the auto choice.
+
+Sharding: the jitted engine invokes the batched ops inside its own
+shard_map over a 1-D ``("trials",)`` mesh, so the kernels always see
+per-device local shards and need no GSPMD partitioning rules.  Called
+OUTSIDE that context under an ambient trials mesh (``set_mesh``), the
+pallas branch self-distributes via ``_shard_batched`` — the XLA branch
+is plain jnp, which GSPMD partitions on its own.
 """
 from __future__ import annotations
 
@@ -27,6 +34,34 @@ from repro.kernels import ref as _ref
 from repro.kernels import sketch as _sk
 
 INTERPRET = jax.default_backend() != "tpu"
+
+
+def _shard_batched(kernel, args, arg_specs, out_spec):
+    """Sharding-aware dispatch for batched Pallas kernels.
+
+    ``pallas_call`` has no GSPMD partitioning rules, so under an ambient
+    1-D ``("trials",)`` mesh (repro.sharding.trials_mesh installed via
+    ``set_mesh``) a batched kernel is wrapped in a shard_map over the
+    leading trial axis — each device runs the Mosaic/interpret kernel on
+    its local shard.  No-op when there is no trials mesh, when the axis
+    is already consumed by an enclosing shard_map (the jitted engine's
+    own manual context), or when the batch does not divide across it.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import ambient_mesh, mesh_axis_size_here, shard_map
+
+    ntr = mesh_axis_size_here("trials")
+    if ntr <= 1 or args[0].shape[0] % ntr:
+        return kernel(*args)
+    specs = tuple(
+        P(*(("trials",) + (None,) * (a.ndim - 1))) if sp else P()
+        for a, sp in zip(args, arg_specs)
+    )
+    out = P(*(("trials",) + (None,) * (out_spec - 1)))
+    return shard_map(kernel, ambient_mesh(), in_specs=specs,
+                     out_specs=out, axis_names={"trials"},
+                     check_vma=False)(*args)
 
 
 def resolve_impl(impl: str | None) -> str:
@@ -93,10 +128,12 @@ def batched_pairwise_relmax(replicas, *, impl: str | None = None,
     d is folded in chunks so the (B, R, R, chunk) broadcast stays
     bounded (~64 MiB) at production gradient sizes."""
     if _batched_impl(impl) == "pallas":
-        return _mv.pairwise_relmax_batched(
-            replicas.astype(jnp.float32),
+        kern = functools.partial(
+            _mv.pairwise_relmax_batched,
             interpret=INTERPRET if interpret is None else interpret,
         )
+        return _shard_batched(kern, (replicas.astype(jnp.float32),),
+                              (True,), 3)
     return _relmax_xla(replicas.astype(jnp.float32))
 
 
@@ -157,10 +194,11 @@ def batched_coded_encode(coeffs, grads, *, impl: str | None = None,
                          interpret: bool | None = None):
     """(B, n_sym, m) @ (B, m, d) -> (B, n_sym, d) f32 per-trial encode."""
     if _batched_impl(impl) == "pallas":
-        return _enc.coded_encode_batched(
-            coeffs, grads,
+        kern = functools.partial(
+            _enc.coded_encode_batched,
             interpret=INTERPRET if interpret is None else interpret,
         )
+        return _shard_batched(kern, (coeffs, grads), (True, True), 3)
     return _ref.batched_coded_encode_ref(coeffs, grads)
 
 
@@ -168,10 +206,12 @@ def batched_sketch(flat_g, key_scalar, k: int = 256, *,
                    impl: str | None = None, interpret: bool | None = None):
     """(B, d) -> (B, k) CountSketches under one shared key."""
     if _batched_impl(impl) == "pallas":
-        return _sk.sketch_batched(
-            flat_g, key_scalar, k=k,
+        kern = functools.partial(
+            _sk.sketch_batched, k=k,
             interpret=INTERPRET if interpret is None else interpret,
         )
+        return _shard_batched(kern, (flat_g, jnp.asarray(key_scalar)),
+                              (True, False), 2)
     return _sketch_xla(flat_g, key_scalar, k)
 
 

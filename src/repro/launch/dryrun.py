@@ -17,6 +17,8 @@ import traceback
 import jax
 import numpy as np
 
+from repro.sharding import set_mesh as _set_mesh
+
 from repro.configs import ASSIGNED, SHAPES, get_config, layer_groups, layer_kinds
 from repro.configs.base import shape_applicable
 from repro.launch import roofline as RL
@@ -52,7 +54,7 @@ def lower_compile(cfg, shape, mesh, opt, *, want_text: bool = True):
     # decode donates the KV/SSM cache (in-place update, no copy)
     donate = {"train": (0, 1), "prefill": (), "decode": (3,)}[shape.kind]
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with _set_mesh(mesh):
         lowered = jax.jit(step, donate_argnums=donate).lower(
             *_flatten_args(specs, shape.kind)
         )
@@ -225,7 +227,7 @@ def run_bft_cells(arch: str, *, multi_pod: bool, f: int = 3) -> dict:
     key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     step = jax.ShapeDtypeStruct((), np.int32)
 
-    with jax.set_mesh(mesh):
+    with _set_mesh(mesh):
         for mode in ("fast", "check", "check_full", "identify"):
             t0 = time.time()
             if mode == "fast":

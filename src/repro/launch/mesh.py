@@ -7,30 +7,23 @@ import; real launches use the actual TPU topology.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_worker_mesh(n_workers: int = 8, model: int = 1):
     """Small mesh for host-scale BFT runs / tests (n workers on `data`)."""
-    return jax.make_mesh(
-        (n_workers, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return make_mesh((n_workers, model), ("data", "model"))
 
 
 def make_pod_worker_mesh(pods: int = 8, data: int = 4, model: int = 16):
     """Alternative production mesh where the BFT worker = one pod
     (DESIGN.md §2: Byzantine unit = failure domain).  512 chips as
     8 pods x 64 chips; used by the pod-granularity BFT dry-run."""
-    return jax.make_mesh(
-        (pods, data, model), ("pod", "data", "model"),
-        axis_types=(AxisType.Auto,) * 3,
-    )
+    return make_mesh((pods, data, model), ("pod", "data", "model"))

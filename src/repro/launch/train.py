@@ -58,10 +58,9 @@ def main() -> None:
     n_dev = len(jax.devices())
     workers = args.workers or n_dev
     model_par = n_dev // workers
-    mesh = jax.make_mesh(
-        (workers, model_par), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.sharding import make_mesh
+
+    mesh = make_mesh((workers, model_par), ("data", "model"))
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -66,12 +66,10 @@ def moe(params, x, cfg):
     — the global path remains as the fallback inside already-manual
     contexts (BFT worker bodies) and on single-device runs.
     """
-    import jax.sharding as jsh
-
-    from repro.sharding import mesh_axis_size_here
+    from repro.sharding import ambient_mesh, mesh_axis_size_here
 
     B, S, D = x.shape
-    mesh = jsh.get_abstract_mesh()
+    mesh = ambient_mesh()
     waxes = tuple(
         a for a in ("pod", "data") if mesh_axis_size_here(a) > 1
     )
@@ -90,8 +88,10 @@ def moe(params, x, cfg):
         # params enter with in_spec P(): shard_map gathers the FSDP (data-
         # sharded) expert weights once per layer — MBs/device — instead of
         # partial-summing expert activations (GBs/device).
-        return jax.shard_map(
-            local, mesh=mesh, in_specs=(P(), spec), out_specs=(spec, P()),
+        from repro.sharding import shard_map
+
+        return shard_map(
+            local, mesh, in_specs=(P(), spec), out_specs=(spec, P()),
             axis_names=set(waxes), check_vma=False,
         )(params, x)
     return _moe_global(params, x, cfg)

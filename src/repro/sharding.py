@@ -17,6 +17,102 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # ---------------------------------------------------------------------------
+# jax-version compatibility: the ambient-mesh API surface moved between
+# jax releases (jax.sharding.AxisType / jax.set_mesh / use_mesh /
+# get_abstract_mesh landed after 0.4.37; the legacy spelling is the Mesh
+# context manager + thread_resources).  Everything in this repo goes
+# through the four shims below so either spelling works.
+# ---------------------------------------------------------------------------
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              devices=None) -> Mesh:
+    """``jax.make_mesh`` with explicit-Auto axis types where supported.
+
+    Old jax has no ``axis_types`` kwarg (every axis is implicitly Auto);
+    new jax defaults to Auto too, but we pass it explicitly so a future
+    default flip cannot silently change sharding behavior.
+    """
+    kwargs: dict[str, Any] = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh
+    (``jax.set_mesh`` / ``jax.sharding.use_mesh`` / legacy Mesh context)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # legacy: Mesh is itself a context manager
+
+
+def ambient_mesh():
+    """The ambient (abstract) mesh, or None when no mesh is installed."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+        if mesh is None or not mesh.axis_names:
+            return None
+        return mesh
+    from jax._src import mesh as _mesh_lib
+
+    mesh = _mesh_lib.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool | None = None):
+    """``jax.shard_map`` compat: new API when present, else the
+    experimental spelling (``axis_names`` -> ``auto`` complement,
+    ``check_vma`` -> ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        kw: dict[str, Any] = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def _bound_axis_names() -> frozenset:
+    """Mesh axis names bound in the current trace's axis env (old-jax
+    spelling of "consumed by an enclosing shard_map").  New jax encodes
+    this in ``mesh.axis_types`` instead; there the env is not consulted."""
+    try:
+        from jax._src import core as _core
+
+        return frozenset(_core.get_axis_env().axis_names())
+    except Exception:
+        return frozenset()
+
+
+def trials_mesh(max_devices: int | None = None) -> Mesh | None:
+    """1-D ``("trials",)`` mesh over the local devices of the default
+    backend — the scenario engine's data-parallel axis (trials are
+    embarrassingly parallel).  Returns None on single-device hosts
+    (plain jit is strictly cheaper there)."""
+    devs = jax.local_devices()
+    if max_devices is not None:
+        devs = devs[:max(1, max_devices)]
+    if len(devs) <= 1:
+        return None
+    return make_mesh((len(devs),), ("trials",), devices=devs)
+
+# ---------------------------------------------------------------------------
 # Default rule tables.
 #
 # `data`-like mesh axes carry the batch (DP) *and* the FSDP shard of the
@@ -172,7 +268,7 @@ def constrain(x, mesh: Mesh, logical: Sequence[str | None]):
 def mesh_axis_size_here(name: str) -> int:
     """Size of a mesh axis in the ambient (abstract) mesh; 1 if absent or
     the axis is Manual (consumed by an enclosing shard_map)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = ambient_mesh()
     if mesh is None or not mesh.axis_names:
         return 1
     sizes = dict(
@@ -188,6 +284,8 @@ def mesh_axis_size_here(name: str) -> int:
                 str(t) == "Auto" or getattr(t, "name", "") == "Auto"
             ):
                 return 1
+    elif name in _bound_axis_names():
+        return 1  # old jax: bound in the trace env => consumed/manual
     return int(sizes.get(name, 1))
 
 
@@ -196,7 +294,7 @@ def constrain_here(x, logical: Sequence[str | None]):
 
     No-op outside a mesh context — model code can call it unconditionally.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = ambient_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     sizes = dict(zip(mesh.axis_names, mesh.shape.values() if isinstance(mesh.shape, dict) else mesh.shape))
@@ -209,6 +307,12 @@ def constrain_here(x, logical: Sequence[str | None]):
             if str(t) == "Auto" or getattr(t, "name", "") == "Auto"
         }
         sizes = {n: s for n, s in sizes.items() if n in auto}
+    else:
+        # old jax: inside a shard_map every mesh axis is bound in the
+        # trace env and constraints naming them are rejected — drop them
+        # (GSPMD still propagates shardings from the operands)
+        bound = _bound_axis_names()
+        sizes = {n: s for n, s in sizes.items() if n not in bound}
     if not sizes:
         return x
 

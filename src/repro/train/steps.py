@@ -49,7 +49,7 @@ from repro.core import byzantine, detection
 from repro.core.assignment import Assignment, group_members
 from repro.models import model as M
 from repro.optim import OptConfig, opt_update
-from repro.sharding import tree_specs
+from repro.sharding import shard_map, tree_specs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,9 +129,9 @@ def make_fast_step(cfg, opt: OptConfig, mesh, sc: StepConfig,
         loss_agg = jax.lax.psum(w * loss, waxes)
         return gagg, loss_agg
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             P(),
             _batch_in_specs(waxes, with_ctx)["tokens"],
@@ -218,9 +218,9 @@ def make_check_step(cfg, opt: OptConfig, mesh, sc: StepConfig,
         return gagg, loss_agg, group_fault, mismatch
 
     wspec = P(waxes if len(waxes) > 1 else waxes[0])
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             P(),
             P(wspec[0], None, None),
@@ -315,9 +315,9 @@ def make_identify_step(cfg, opt: OptConfig, mesh, sc: StepConfig,
         return gagg, loss_agg, byz
 
     wspec = P(waxes if len(waxes) > 1 else waxes[0])
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             P(), P(wspec[0], None, None), P(wspec[0], None, None),
             wspec, wspec, P(), P(),
@@ -366,9 +366,9 @@ def make_filter_step(cfg, opt: OptConfig, mesh, sc: StepConfig,
         return gagg, loss_agg
 
     wspec = P(waxes if len(waxes) > 1 else waxes[0])
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             P(), P(wspec[0], None, None), P(wspec[0], None, None),
             wspec, wspec, P(), P(),

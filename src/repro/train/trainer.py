@@ -38,7 +38,7 @@ from repro.core.randomized import BFTConfig, ProtocolState
 from repro.data import global_batch_for_step, worker_batches
 from repro.models import model as M
 from repro.optim import OptConfig, init_opt_state, opt_update
-from repro.sharding import PARAM_RULES, tree_specs
+from repro.sharding import PARAM_RULES, set_mesh, tree_specs
 from repro.train.steps import (
     AttackConfig,
     StepConfig,
@@ -90,7 +90,7 @@ class Trainer:
         self.last_loss: float = 1.0
         self.history: list[dict] = []
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             abstract = M.abstract_params(cfg)
             shardings = jax.tree.map(
                 lambda s: NamedSharding(mesh, s),
@@ -157,7 +157,7 @@ class Trainer:
         record: dict[str, Any] = {"step": st.step}
 
         mode = self.bft.mode
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             if mode in ("deterministic", "randomized") and st.decide_check(
                 self.last_loss
             ):

@@ -15,6 +15,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # SPMD subprocess scenario: minutes
+
 SCENARIO = os.path.join(os.path.dirname(__file__), "scenarios", "bft_scenario.py")
 
 
@@ -25,6 +27,11 @@ def results():
         capture_output=True, text=True, timeout=1800,
         env={**os.environ, "JAX_PLATFORMS": "cpu"},
     )
+    if "SCENARIO_SKIP" in proc.stdout:
+        # the scenario itself declares the environment unusable (e.g.
+        # the forced 8-device host platform is unavailable); any other
+        # failure — imports, mesh, training — is a real regression
+        pytest.skip(proc.stdout.split("SCENARIO_SKIP", 1)[1].splitlines()[0])
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "SCENARIO_DONE" in proc.stdout, proc.stdout[-4000:]
     out = {}

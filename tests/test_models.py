@@ -15,6 +15,8 @@ from repro.models import ssm as ssm_mod
 from repro.models.attention import blockwise_attention
 from repro.optim import OptConfig, init_opt_state, opt_update
 
+pytestmark = pytest.mark.slow  # seed model smoke tests: minutes, not seconds
+
 KEY = jax.random.PRNGKey(0)
 
 

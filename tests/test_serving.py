@@ -10,6 +10,8 @@ from repro.configs import get_config
 from repro.models import model as M
 from repro.serving import ServeEngine, audit_decode
 
+pytestmark = pytest.mark.slow  # seed model smoke tests: minutes, not seconds
+
 KEY = jax.random.PRNGKey(0)
 
 

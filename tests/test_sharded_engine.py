@@ -1,0 +1,197 @@
+"""Multi-device sharded engine: parity + error-path regressions.
+
+The parity half runs tests/scenarios/sharded_engine_scenario.py in a
+subprocess (its own XLA_FLAGS forces an 8-device host platform) and
+asserts the documented contract: with the trial batch sharded over a
+("trials",) mesh, control quantities equal the numpy engine EXACTLY and
+float quantities match at the f32 tolerances — over the whole SCENARIOS
+grid, through the chunked async pipeline, and with padded remainders.
+
+The regression half pins the backend-hardening fixes (mixed problem
+dims, zero-step batches, chunk_trials validation) in-process.
+"""
+import ast
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.engine import TrialSpec, run_batch
+
+SCENARIO = os.path.join(os.path.dirname(__file__), "scenarios",
+                        "sharded_engine_scenario.py")
+
+
+@pytest.fixture(scope="module")
+def results():
+    proc = subprocess.run(
+        [sys.executable, SCENARIO],
+        capture_output=True, text=True, timeout=1500,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    if "SCENARIO_SKIP" in proc.stdout:
+        # the scenario itself declares the environment unusable (e.g.
+        # the forced 8-device host platform is unavailable); any other
+        # failure — imports, mesh, parity — is a real regression
+        pytest.skip(proc.stdout.split("SCENARIO_SKIP", 1)[1].splitlines()[0])
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SCENARIO_DONE" in proc.stdout, proc.stdout[-4000:]
+    out = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            k, v = line[len("RESULT "):].split("=", 1)
+            try:
+                out[k] = ast.literal_eval(v)
+            except (ValueError, SyntaxError):
+                out[k] = v
+    return out
+
+
+@pytest.mark.slow
+def test_sharded_runs_on_full_mesh(results):
+    assert results["devices"] == 8
+    assert results["mesh_shape"] == (8,)
+
+
+@pytest.mark.slow
+def test_sharded_scenarios_control_parity(results):
+    from repro.core.engine import SCENARIOS
+
+    for name in list(SCENARIOS) + ["mixed_problems"]:
+        assert results[f"{name}_control_parity"] is True, name
+
+
+@pytest.mark.slow
+def test_sharded_scenarios_value_parity(results):
+    from repro.core.engine import SCENARIOS
+
+    for name in list(SCENARIOS) + ["mixed_problems"]:
+        assert results[f"{name}_value_parity"] is True, name
+
+
+@pytest.mark.slow
+def test_sharded_equals_unsharded(results):
+    assert results["sharded_equals_unsharded"] is True
+
+
+@pytest.mark.slow
+def test_chunk_pipeline_and_padding(results):
+    assert results["chunk_pipeline_parity"] is True
+    assert results["small_batch_padding_parity"] is True
+
+
+@pytest.mark.slow
+def test_ops_sharding_aware_pallas_dispatch(results):
+    """Under an ambient trials mesh, batched Pallas ops shard over the
+    leading trial axis (kernels/ops._shard_batched) and match the XLA
+    reference."""
+    assert results["ops_sharded_pallas"] is True
+
+
+# ---------------------------------------------------------------------------
+# Error-path regressions (in-process, single device is fine)
+# ---------------------------------------------------------------------------
+
+
+def test_jax_backend_rejects_mixed_problem_dims():
+    """Mixed (n_data, d) must raise the same clear ValueError as the
+    numpy backend — not an opaque broadcast error mid-copy."""
+    specs = [TrialSpec(steps=5, n_data=256, d=8, attack="drift"),
+             TrialSpec(steps=5, n_data=128, d=4, attack="drift")]
+    with pytest.raises(ValueError, match=r"share \(n_data, d\)"):
+        run_batch(specs, backend="jax")
+    with pytest.raises(ValueError, match=r"share \(n_data, d\)"):
+        run_batch(specs)
+
+
+def test_jax_backend_zero_steps_keeps_backend_attrs():
+    """The all-trials-zero-steps early return must still carry the
+    documented detect_flags / schedule attributes."""
+    specs = [TrialSpec(byz=(2,), attack="drift", steps=0, q=0.5)]
+    out = run_batch(specs, backend="jax")
+    assert out.detect_flags.shape == (0, 1)
+    assert out.schedule.arrays == {}
+    assert out[0].losses == []
+
+
+def test_jax_backend_rejects_bad_chunk_trials():
+    spec = TrialSpec(byz=(2,), attack="drift", steps=5, q=0.5)
+    with pytest.raises(ValueError, match="chunk_trials"):
+        run_batch([spec], backend="jax", chunk_trials=0)
+    with pytest.raises(ValueError, match="chunk_trials"):
+        run_batch([spec], backend="jax", chunk_trials=-3)
+
+
+def test_jax_backend_rejects_bad_mesh():
+    spec = TrialSpec(byz=(2,), attack="drift", steps=5, q=0.5)
+    with pytest.raises(ValueError, match="mesh"):
+        run_batch([spec], backend="jax", mesh="bogus")
+
+
+def test_single_device_chunked_pipeline_matches_unchunked():
+    """The async chunk pipeline (several chunks, odd remainder) returns
+    the same device outputs as one big chunk, up to the few-ulp f32
+    reassociation different batch shapes cause in XLA reductions."""
+    specs = [TrialSpec(byz=(2, 5), attack="drift", q=0.4, steps=30, seed=s)
+             for s in range(7)]
+    one = run_batch(specs, backend="jax", mesh=None)
+    many = run_batch(specs, backend="jax", mesh=None, chunk_trials=3)
+    for a, b in zip(one, many):
+        np.testing.assert_allclose(a.w, b.w, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(a.losses, b.losses,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_vector_schedule_equals_proxy_schedule():
+    """The vectorized control-plane replay (build_schedule mode
+    "vector") produces the identical schedule arrays and control results
+    as the full-engine proxy replay."""
+    from repro.core.engine import FaultEvent
+    from repro.core.engine_jax import build_schedule
+
+    specs = [
+        TrialSpec(byz=(2, 5), attack="drift", steps=80, q=0.4, seed=1),
+        TrialSpec(byz=(1,), attack="noise", steps=70, mode="deterministic",
+                  q=None, seed=2),
+        TrialSpec(byz=(3,), attack="drift", steps=60, mode="draco",
+                  q=None, seed=0),
+        TrialSpec(byz=(6,), attack="drift", steps=75, q=0.3,
+                  selective=True, seed=7),
+        TrialSpec(byz=(5,), attack="none", steps=100, q=0.3, seed=3,
+                  events=(FaultEvent(40, "crash", (1, 7)),
+                          FaultEvent(80, "recover", (1,)))),
+        TrialSpec(byz=(2, 5), attack="drift", steps=50, q=0.5, seed=13,
+                  onset=20),
+        TrialSpec(byz=(), attack="none", steps=40, q=0.4, seed=3,
+                  mode="filter:krum"),
+    ]
+    vec = build_schedule(specs, "vector")
+    prx = build_schedule(specs, "proxy")
+    assert set(vec.arrays) == set(prx.arrays)
+    for k in prx.arrays:
+        assert vec.arrays[k].dtype == prx.arrays[k].dtype, k
+        assert np.array_equal(vec.arrays[k], prx.arrays[k]), k
+    for rv, rp in zip(vec.control, prx.control):
+        assert rv.identify_step == rp.identify_step
+        assert rv.q_trace == rp.q_trace
+        assert rv.efficiency == rp.efficiency
+        mv, mp = rv.state.meter, rp.state.meter
+        assert (mv.used, mv.computed, mv.iterations, mv.check_iterations,
+                mv.identify_iterations) == (
+            mp.used, mp.computed, mp.iterations, mp.check_iterations,
+            mp.identify_iterations)
+        assert mv.history == mp.history
+        assert np.array_equal(rv.state.active, rp.state.active)
+        assert np.array_equal(rv.state.identified, rp.state.identified)
+
+
+def test_vector_schedule_rejects_value_dependent_trials():
+    from repro.core.engine_jax import build_schedule
+
+    dependent = [TrialSpec(byz=(2,), attack="sign_flip", steps=10, q=0.5)]
+    with pytest.raises(ValueError, match="value-dependent"):
+        build_schedule(dependent, "vector")
+    # auto falls back to the oracle replay instead
+    assert not build_schedule(dependent, "auto").used_proxy
