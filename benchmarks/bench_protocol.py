@@ -383,6 +383,62 @@ def engine_devices() -> list[tuple]:
     return rows
 
 
+def adaptive_sweep() -> list[tuple]:
+    """The on-device control plane's acceptance bar: a 256-trial
+    ADAPTIVE (q*_t) sweep with schedule="device" — value-dependent
+    check decisions computed inside the device scan, no host oracle
+    replay — vs schedule="oracle" (full numpy-engine control replay,
+    previously the only option for adaptive trials).  Control parity is
+    asserted against the numpy engine under the same counter-RNG
+    streams (rng="device").  Acceptance: >= 5x warm wall-clock."""
+    B = int(os.environ.get("REPRO_BENCH_TRIALS", "256"))
+    steps = int(os.environ.get("REPRO_BENCH_ADAPTIVE_STEPS", "24"))
+    d = 1 << int(os.environ.get("REPRO_BENCH_ADAPTIVE_DEXP", "13"))
+    specs = [
+        TrialSpec(byz=(2, 5), attack="sign_flip", q=None, steps=steps,
+                  seed=s, n_data=64, d=d, label=f"s{s}")
+        for s in range(B)
+    ]
+    t0 = time.perf_counter()
+    dev = run_batch(specs, backend="jax", schedule="device")
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dev = run_batch(specs, backend="jax", schedule="device")
+    t_dev = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_batch(specs, backend="jax", schedule="oracle")
+    t_oracle = time.perf_counter() - t0
+    npb = run_batch(specs, rng="device")       # parity oracle
+    ctrl_ok = all(
+        a.identify_step == b.identify_step
+        and a.state.kappa == b.state.kappa
+        and a.efficiency == b.efficiency
+        for a, b in zip(npb, dev)
+    )
+    # q*_t traces: the device loss is an f32 d-length dot product vs
+    # the host's f64, so q* carries the float contract (1e-4)
+    q_ok = all(
+        np.allclose(np.asarray(b.q_trace), np.asarray(a.q_trace),
+                    rtol=1e-4, atol=1e-4)
+        for a, b in zip(npb, dev)
+    )
+    speedup = t_oracle / t_dev
+    detail = {
+        "trials": B, "steps": steps, "d": d,
+        "oracle_s": t_oracle, "device_warm_s": t_dev,
+        "device_cold_s": t_cold, "speedup": speedup,
+        "control_parity": ctrl_ok, "q_parity": q_ok,
+    }
+    _dump("adaptive_sweep", detail)
+    return [
+        ("adaptive_sweep[oracle]", t_oracle * 1e6, f"{t_oracle:.2f}s"),
+        ("adaptive_sweep[device_warm]", t_dev * 1e6, f"{t_dev:.2f}s"),
+        ("adaptive_sweep[speedup]", 0.0, f"{speedup:.1f}x"),
+        ("adaptive_sweep[target_5x_met]", 0.0, str(speedup >= 5.0)),
+        ("adaptive_sweep[control_parity]", 0.0, str(ctrl_ok and q_ok)),
+    ]
+
+
 def fig2_code() -> list[tuple]:
     import jax
     import jax.numpy as jnp
@@ -422,4 +478,4 @@ def _dump(name: str, obj) -> None:
 
 ALL = [efficiency_vs_q, scheme_comparison, identification_time,
        adaptive_trace, engine_speedup, schedule_build, engine_devices,
-       fig2_code]
+       adaptive_sweep, fig2_code]

@@ -55,6 +55,33 @@ def q_star(f_t: int, p: float, lam: float) -> float:
     return min(1.0, max(0.0, lam * b * b / denom))
 
 
+def lam_from_loss_arr(loss, xp):
+    """Vectorized eq. 5 — ``xp`` is numpy or jax.numpy.  Matches
+    ``lam_from_loss`` elementwise in ``loss``'s dtype."""
+    return 1.0 - xp.exp(-xp.maximum(loss, 0.0))
+
+
+def q_star_arr(f_t, p, lam, xp):
+    """Vectorized, trace-friendly closed form of ``q_star``.
+
+    ``f_t`` (int array), ``p`` / ``lam`` (float arrays) broadcast;
+    ``xp`` is numpy or jax.numpy — under jax this is the on-device
+    control plane's q*_t, computed in float32 inside the jitted scan
+    (the math.* scalar version above stays the float64 host oracle).
+    Guards mirror ``q_star`` exactly: f_t <= 0 -> 0, b == 0 -> 0,
+    lam clipped to [0, 1], denom == 0 -> 0, result clipped to [0, 1].
+    """
+    ft = xp.maximum(f_t, 0).astype(lam.dtype if hasattr(lam, "dtype")
+                                   else xp.float64)
+    a = 2.0 * ft / (2.0 * ft + 1.0)
+    b = 1.0 - (1.0 - p) ** ft
+    lam = xp.clip(lam, 0.0, 1.0)
+    denom = (1.0 - lam) * a * a + lam * b * b
+    ok = (ft > 0) & (b != 0.0) & (denom != 0.0)
+    q = lam * b * b / xp.where(ok, denom, 1.0)
+    return xp.where(ok, xp.clip(q, 0.0, 1.0), 0.0)
+
+
 def q_star_numeric(f_t: int, p: float, lam: float, grid: int = 20001) -> float:
     """Brute-force minimizer of eq. 4 (validation oracle for q_star)."""
     if f_t <= 0:

@@ -56,7 +56,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import adaptive, filters as filters_mod
+from repro.core import adaptive, filters as filters_mod, rngstream
 from repro.core.assignment import (
     Assignment,
     BatchedAssignment,
@@ -430,6 +430,77 @@ class _TamperStreams:
                 if ui < self.p[b]]
 
 
+def _install_device_streams(specs, trials) -> "rngstream.StepClock":
+    """Swap every trial's permutation generator for the counter-indexed
+    ``CounterPermuter`` (rngstream PERM stream) and return the shared
+    step clock the engine must advance once per iteration."""
+    clock = rngstream.StepClock()
+    for s, tr in zip(specs, trials):
+        tr.st.rng = rngstream.CounterPermuter(
+            rngstream.perm_keys(s.seed, s.steps, s.n), clock)
+    return clock
+
+
+class _DeviceTamperStreams:
+    """``rng="device"`` tamper decisions: counter-indexed threefry draws
+    (repro.core.rngstream TAMPER stream) instead of the legacy cursor
+    stream.  Same interface as ``_TamperStreams``, but a worker's coin
+    at (t, phase) is a pure function of (seed, t, phase, w) — it never
+    depends on which other workers are active or on earlier control
+    flow — so the jitted device scan reproduces every decision
+    bit-for-bit (uniforms compared in float32 on both sides)."""
+
+    def __init__(self, specs, trials):
+        B = len(specs)
+        self.p32 = np.array([s.p_tamper for s in specs], np.float32)
+        self.onset = np.array([s.onset for s in specs])
+        self.u = [rngstream.tamper_uniforms(s.seed, s.steps, s.n)
+                  if s.byz else None for s in specs]
+        self.trials = trials
+        self.specs = specs
+        self.nb = np.zeros(B, np.int64)
+        self.wid = np.zeros((B, 1), np.int64)
+        self.refresh()
+
+    def refresh(self, only: "list[int] | None" = None):
+        if only is not None and self.wid.size:
+            for b in only:
+                lst = [w for w in self.specs[b].byz
+                       if self.trials[b].st.active[w]]
+                self.nb[b] = len(lst)
+                self.wid[b, :len(lst)] = lst
+                self.wid[b, len(lst):] = 0
+            return
+        lists = [[w for w in s.byz if self.trials[b].st.active[w]]
+                 for b, s in enumerate(self.specs)]
+        self.nb = np.fromiter((len(x) for x in lists), np.int64, len(lists))
+        width = max(1, int(self.nb.max()) if len(lists) else 1)
+        self.wid = np.zeros((len(lists), width), np.int64)
+        for b, x in enumerate(lists):
+            self.wid[b, :len(x)] = x
+
+    def phase1_hits(self, t: int, live: np.ndarray):
+        elig = live & (self.nb > 0) & (t >= self.onset)
+        if not elig.any():
+            return None
+        hb, hw = [], []
+        for b in np.flatnonzero(elig):
+            w = self.wid[b, : self.nb[b]]
+            hit = w[self.u[b][t, 0, w] < self.p32[b]]
+            if hit.size:
+                hb.append(np.full(hit.size, b, np.int64))
+                hw.append(hit)
+        if not hb:
+            return None
+        return np.concatenate(hb), np.concatenate(hw)
+
+    def phase2_hits(self, b: int, t: int) -> list[int]:
+        if t < self.onset[b] or not self.nb[b]:
+            return []
+        w = self.wid[b, : self.nb[b]]
+        return [int(x) for x in w[self.u[b][t, 1, w] < self.p32[b]]]
+
+
 _VEC_ATTACK_ORDER = list(_VEC_ATTACKS)
 
 
@@ -533,6 +604,7 @@ class ScheduleRecorder:
 
 
 def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
+              rng: str = "host",
               _recorder: "ScheduleRecorder | None" = None,
               **backend_kwargs) -> BatchResult:
     """Run B independent protocol trials in one vectorized pass.
@@ -543,6 +615,15 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
     protocol, one ``lax.scan`` over the whole iteration loop, exact on
     control quantities and float-tolerance-close on values; see
     docs/performance.md.
+
+    ``rng`` selects the decision-stream contract of the numpy engine:
+    ``"host"`` (default) is the legacy PCG64 streams shared with
+    ``run_protocol``; ``"device"`` swaps in the counter-indexed
+    threefry streams of repro.core.rngstream — the contract the jitted
+    on-device control plane (engine_jax ``schedule="device"``)
+    reproduces bit-for-bit — making this pass the differential-parity
+    oracle for that path.  Device streams are defined only for
+    ``device_schedulable`` trials.
 
     Rare, trial-local work (check-iteration detection, reactive votes,
     state transitions) stays per-trial — it must replay each trial's
@@ -555,12 +636,19 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
     if backend == "jax":
         from repro.core.engine_jax import run_batch_jax
 
+        if rng != "host":
+            raise ValueError(
+                'backend="jax" takes schedule="device" instead of '
+                'rng="device" (the device scan IS the device stream)')
         return run_batch_jax(specs, **backend_kwargs)
     if backend != "numpy":
         raise ValueError(f"unknown engine backend {backend!r}")
     if backend_kwargs:
         raise TypeError(
             f"numpy backend takes no extra kwargs: {sorted(backend_kwargs)}")
+    if rng not in ("host", "device"):
+        raise ValueError(f"unknown rng stream contract {rng!r}")
+    device_rng = rng == "device"
 
     t_start = time.perf_counter()
     specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
@@ -609,7 +697,17 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
     bstate = BatchedProtocolState(cfgs)
     n_max = bstate.n_max
     trials = [_Trial(s, bstate.trial(b)) for b, s in enumerate(specs)]
-    streams = _TamperStreams(specs, trials)
+    if device_rng:
+        bad = [not device_schedulable(s) for s in specs]
+        if any(bad):
+            raise ValueError(
+                "device RNG streams undefined for trials: "
+                f"{spec_display_names(specs, bad)}")
+        clock = _install_device_streams(specs, trials)
+        streams = _DeviceTamperStreams(specs, trials)
+    else:
+        clock = None
+        streams = _TamperStreams(specs, trials)
     att_codes = attack_codes(trials)
     for tr in trials:
         tr.act_idx = np.flatnonzero(tr.st.active)
@@ -639,9 +737,14 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
             # consume the trial's own decide stream: same values as
             # step-wise draws, and the stream is not used elsewhere for
             # non-selective trials
-            u_mat[b, :s.steps] = bstate.trial(b).decide_rng.random(s.steps)
+            u_mat[b, :s.steps] = (
+                rngstream.decide_uniforms(s.seed, s.steps)
+                if device_rng
+                else bstate.trial(b).decide_rng.random(s.steps))
     q_eff = np.array([_q_fixed(s, s.f) if is_vec[b] else 0.0
                       for b, s in enumerate(specs)])
+    if device_rng:          # device compares in f32; fixed-q bits agree
+        q_eff = q_eff.astype(np.float32).astype(np.float64)
     vec_idx = np.flatnonzero(is_vec)
     adaptive_idx = np.flatnonzero(is_adaptive)
     selective_idx = np.flatnonzero(is_selective)
@@ -688,6 +791,9 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
         else:
             live = steps_arr > t
             live_all = bool(live.all())
+
+        if clock is not None:
+            clock.t = t
 
         if _recorder is not None:  # phase-2 capture buffers for this step
             rec_sh2 = np.zeros((B, n_max), np.int32)
@@ -739,6 +845,8 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
                         trials[b].st.last_lambda = lam
                         q_t = adaptive.q_star(int(f_t), specs[b].p_tamper,
                                               lam)
+                        if device_rng:  # device compares q*_t in f32
+                            q_t = float(np.float32(q_t))
                     last_q[b] = q_t
                     checks[b] = u_mat[b, t] < q_t
             for b in selective_idx:
@@ -889,6 +997,8 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
                     dirty_trials.append(b)
                     if is_vec[b]:
                         q_eff[b] = _q_fixed(s, int(f_t_arr[b]))
+                        if device_rng:
+                            q_eff[b] = np.float32(q_eff[b])
                 voted[b] = (votes[0] if len(votes) == 1
                             else np.mean(votes, axis=0))
                 agg_weight[b] = 0.0
@@ -987,9 +1097,45 @@ def value_independent_control(spec: TrialSpec) -> bool:
         and spec.attack in VALUE_INDEPENDENT_ATTACKS
 
 
+def spec_display_names(specs: list[TrialSpec], flags) -> list[str]:
+    """Human-readable names for the specs where ``flags`` is truthy —
+    the label when one was given, otherwise a descriptive
+    ``spec[i](mode/attack...)`` so error messages never degenerate to
+    bare indices."""
+    out = []
+    for i, (s, bad) in enumerate(zip(specs, flags)):
+        if not bad:
+            continue
+        if s.label:
+            out.append(s.label)
+        else:
+            q = "adaptive" if s.q is None else f"q={s.q}"
+            out.append(f"spec[{i}]({s.mode}/{s.attack}/{q})")
+    return out
+
+
+def device_schedulable(spec: TrialSpec) -> bool:
+    """True when the trial's control plane can run INSIDE the jitted
+    device scan (engine_jax ``schedule="device"``) under the
+    ``rng="device"`` stream contract: affine attacks, plain
+    none/deterministic/randomized modes (adaptive q* included — that's
+    the point), no selective checks, no crash/recover events, no
+    filters, no draco.  Value-DEPENDENT classes are fine; what's
+    excluded is control flow the scan cannot express (per-worker
+    selective coins, membership churn injected from outside)."""
+    if not isinstance(spec.attack, str):
+        return False
+    from repro.core.engine_jax import AFFINE_ATTACKS
+
+    return (spec.attack in AFFINE_ATTACKS
+            and spec.mode in ("none", "deterministic", "randomized")
+            and not spec.selective
+            and not spec.events)
+
+
 def replay_control_fast(specs: list[TrialSpec],
                         recorder: "ScheduleRecorder | None" = None,
-                        ) -> BatchResult:
+                        *, rng: str = "host") -> BatchResult:
     """Control-plane-only replay: the numpy engine's exact state machine
     with the data plane deleted.
 
@@ -1013,11 +1159,20 @@ def replay_control_fast(specs: list[TrialSpec],
 
     t_start = time.perf_counter()
     specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
-    bad = [s.label or i for i, s in enumerate(specs)
-           if not value_independent_control(s)]
-    if bad:
+    bad = [not value_independent_control(s) for s in specs]
+    if any(bad):
         raise ValueError(
-            f"control-only replay invalid for value-dependent trials: {bad}")
+            "control-only replay invalid for value-dependent trials: "
+            f"{spec_display_names(specs, bad)}")
+    if rng not in ("host", "device"):
+        raise ValueError(f"unknown rng stream contract {rng!r}")
+    device_rng = rng == "device"
+    if device_rng:
+        bad = [not device_schedulable(s) for s in specs]
+        if any(bad):
+            raise ValueError(
+                "device RNG streams undefined for trials: "
+                f"{spec_display_names(specs, bad)}")
     B = len(specs)
     if B == 0:
         return BatchResult([], [], 0.0)
@@ -1031,7 +1186,9 @@ def replay_control_fast(specs: list[TrialSpec],
     bstate = BatchedProtocolState(cfgs)
     n_max = bstate.n_max
     trials = [_Trial(s, bstate.trial(b)) for b, s in enumerate(specs)]
-    streams = _TamperStreams(specs, trials)
+    clock = _install_device_streams(specs, trials) if device_rng else None
+    streams = (_DeviceTamperStreams if device_rng
+               else _TamperStreams)(specs, trials)
     for tr in trials:
         tr.act_idx = np.flatnonzero(tr.st.active)
 
@@ -1046,9 +1203,14 @@ def replay_control_fast(specs: list[TrialSpec],
     u_mat = np.zeros((B, T_max))
     for b, s in enumerate(specs):
         if is_vec[b] and s.steps:
-            u_mat[b, :s.steps] = bstate.trial(b).decide_rng.random(s.steps)
+            u_mat[b, :s.steps] = (
+                rngstream.decide_uniforms(s.seed, s.steps)
+                if device_rng
+                else bstate.trial(b).decide_rng.random(s.steps))
     q_eff = np.array([_q_fixed(s, s.f) if is_vec[b] else 0.0
                       for b, s in enumerate(specs)])
+    if device_rng:          # device compares in f32; fixed-q bits agree
+        q_eff = q_eff.astype(np.float32).astype(np.float64)
     vec_idx = np.flatnonzero(is_vec)
     selective_idx = np.flatnonzero(is_selective)
     filter_trials = np.flatnonzero(
@@ -1114,6 +1276,8 @@ def replay_control_fast(specs: list[TrialSpec],
             live_all = bool(live.all())
 
         rec_sh2 = rec_gr2 = rec_m2 = rec_tam2 = None   # allocated on use
+        if clock is not None:
+            clock.t = t
 
         for b in has_events:
             if live[b]:
@@ -1262,6 +1426,8 @@ def replay_control_fast(specs: list[TrialSpec],
                     dirty_trials.append(b)
                     if is_vec[b]:
                         q_eff[b] = _q_fixed(s, int(f_t_arr[b]))
+                        if device_rng:
+                            q_eff[b] = np.float32(q_eff[b])
                 agg_weight[b] = 0.0
             else:
                 st.on_clean_check(tr.mem1.ravel())
@@ -1294,6 +1460,239 @@ def replay_control_fast(specs: list[TrialSpec],
         used_acc += used_t
         comp_acc += comp_t
         check_acc += (checks | draco_mask) & live
+        ident_acc += identified_t
+        eff_hist[:, t] = used_t / np.maximum(1, comp_t)
+
+    # -- materialize control results (no float quantities) ----------------
+    empty = np.zeros(0)
+    results = []
+    for b, s in enumerate(specs):
+        tr, st = trials[b], trials[b].st
+        st.step = s.steps
+        meter = st.meter
+        meter.used = int(used_acc[b])
+        meter.computed = int(comp_acc[b])
+        meter.iterations = s.steps
+        meter.check_iterations = int(check_acc[b])
+        meter.identify_iterations = int(ident_acc[b])
+        meter.history = eff_hist[b, :s.steps].tolist()
+        st.last_q = float(q_trace_mat[b, s.steps - 1]) if s.steps else 0.0
+        results.append(SimResult(
+            w=empty,
+            w_true=empty,
+            state=st,
+            losses=[],
+            q_trace=q_trace_mat[b, :s.steps].tolist(),
+            identify_step=tr.ident_step,
+        ))
+    return BatchResult(specs, results, time.perf_counter() - t_start)
+
+
+def replay_control_from_trace(specs: list[TrialSpec | dict], trace: dict,
+                              recorder: "ScheduleRecorder | None" = None,
+                              ) -> BatchResult:
+    """Reconstruct the full control plane from a device decision trace.
+
+    ``trace`` is the on-device scan's per-step decision record under the
+    ``rng="device"`` stream contract:
+
+      * ``q``       (T, B) float   — the q*_t each trial compared against
+      * ``check``   (T, B) bool    — check iterations that fired
+      * ``detect``  (T, B) bool    — checks whose replicas mismatched
+      * ``faulty2`` (T, B, n) bool — workers the identify vote flagged
+
+    Everything else — replica-group permutations, tamper bits, shard
+    assignments, efficiency meters, eliminations — is a pure function of
+    ``(seed, t, phase, worker)`` through the counter-based streams in
+    ``repro.core.rngstream``, so this replay recomputes it exactly
+    without touching the data plane.  Value-dependent trials (adaptive
+    q*_t, value-dependent attacks) are fine here, unlike
+    ``replay_control_fast``: the value-dependent *decisions* arrive in
+    the trace; only the value-independent remainder is replayed.
+
+    Results carry control quantities only (``w``/``w_true`` empty,
+    ``losses == []``); the jax backend grafts the device floats on.
+    """
+    from repro.core.simulation import SimResult
+
+    t_start = time.perf_counter()
+    specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
+    bad = [not device_schedulable(s) for s in specs]
+    if any(bad):
+        raise ValueError("device RNG streams undefined for trials: "
+                         f"{spec_display_names(specs, bad)}")
+    B = len(specs)
+    if B == 0:
+        return BatchResult([], [], 0.0)
+
+    cfgs = []
+    for s in specs:
+        cfgs.append(BFTConfig(n=s.n, f=s.f, mode=s.mode, q=s.q,
+                              p_assumed=s.p_tamper, selective=s.selective,
+                              seed=s.seed))
+    bstate = BatchedProtocolState(cfgs)
+    n_max = bstate.n_max
+    trials = [_Trial(s, bstate.trial(b)) for b, s in enumerate(specs)]
+    clock = _install_device_streams(specs, trials)
+    streams = _DeviceTamperStreams(specs, trials)
+    for tr in trials:
+        tr.act_idx = np.flatnonzero(tr.st.active)
+
+    steps_arr = np.array([s.steps for s in specs])
+    T_max = int(steps_arr.max()) if B else 0
+
+    tr_q = np.asarray(trace["q"], np.float64)
+    tr_check = np.asarray(trace["check"], bool)
+    tr_detect = np.asarray(trace["detect"], bool)
+    tr_faulty2 = np.asarray(trace["faulty2"], bool)
+    want = {"q": (T_max, B), "check": (T_max, B), "detect": (T_max, B),
+            "faulty2": (T_max, B, n_max)}
+    for name, arr in (("q", tr_q), ("check", tr_check),
+                      ("detect", tr_detect), ("faulty2", tr_faulty2)):
+        if arr.shape != want[name]:
+            raise ValueError(f"trace[{name!r}] has shape {arr.shape}, "
+                             f"expected {want[name]}")
+
+    used_acc = np.zeros(B, np.int64)
+    comp_acc = np.zeros(B, np.int64)
+    check_acc = np.zeros(B, np.int64)
+    ident_acc = np.zeros(B, np.int64)
+    eff_hist = np.zeros((B, T_max))
+    q_trace_mat = np.zeros((B, T_max))
+
+    f_t_arr = np.array([s.f for s in specs])
+    uniform_steps = bool((steps_arr == T_max).all())
+
+    fast_cache = fast_assignment_batched(bstate.active)
+    n_active = bstate.active.sum(axis=1)
+    dirty_trials: list[int] = []
+    live_const = np.ones(B, bool)
+
+    zero_sh2 = np.zeros((B, n_max), np.int32)
+    zero_gr2 = np.full((B, n_max), -1, np.int32)
+    zero_m2 = np.ones(B, np.int64)
+    zero_tam = np.zeros((B, n_max), bool)
+    for a in (zero_sh2, zero_gr2, zero_m2, zero_tam):
+        a.setflags(write=False)
+
+    for t in range(T_max):
+        if uniform_steps:
+            live, live_all = live_const, True
+        else:
+            live = steps_arr > t
+            live_all = bool(live.all())
+
+        rec_sh2 = rec_gr2 = rec_m2 = rec_tam2 = None   # allocated on use
+        clock.t = t
+
+        if dirty_trials:
+            fast_cache = fast_assignment_batched(
+                bstate.active | ~live[:, None])
+            n_active = (bstate.active & live[:, None]).sum(axis=1)
+            streams.refresh(only=dirty_trials)
+            for b in dirty_trials:
+                trials[b].act_idx = np.flatnonzero(trials[b].st.active)
+            dirty_trials = []
+
+        # -- decisions come from the trace --------------------------------
+        checks = tr_check[t] & live
+        q_trace_mat[:, t] = np.where(live, tr_q[t], 0.0)
+
+        # -- phase-1 assignments (copy-on-write over the fast cache) ------
+        check_idx = np.flatnonzero(checks)
+        if check_idx.size:
+            batch_a = BatchedAssignment(
+                fast_cache.shard_of_worker.copy(),
+                fast_cache.group_of_worker.copy(),
+                fast_cache.weight.copy(),
+                fast_cache.num_shards.copy(),
+            )
+            for b in check_idx:
+                tr = trials[b]
+                r1 = max(1, int(f_t_arr[b])) + 1
+                m1, mem = _grouped_rows_into(batch_a, b, tr.act_idx, r1,
+                                             tr.st.rng)
+                tr.m1, tr.r1, tr.mem1 = m1, r1, mem
+        else:
+            batch_a = fast_cache
+
+        if live_all:
+            group_all = batch_a.group_of_worker
+        else:
+            group_all = np.where(live[:, None], batch_a.group_of_worker, -1)
+        shard_all = batch_a.shard_of_worker
+        m_all = batch_a.num_shards
+
+        # -- tamper bits (phase 1) ----------------------------------------
+        hits = streams.phase1_hits(t, live)
+        if hits is None:
+            tam1 = zero_tam
+        else:
+            tam1 = np.zeros((B, n_max), bool)
+            tam1[hits[0], hits[1]] = True
+
+        is_fast = np.ones(B, bool)
+        is_fast[check_idx] = False
+        fast_live = is_fast if live_all else (is_fast & live)
+        used_t = np.where(fast_live, m_all, 0)
+        comp_t = np.where(fast_live, n_active, 0)
+        identified_t = tr_detect[t] & checks
+        agg_weight = np.where(fast_live[:, None], batch_a.weight,
+                              np.float32(0.0))
+
+        for b in check_idx:
+            tr, st, s = trials[b], trials[b].st, specs[b]
+            used_t[b] = tr.m1
+            comp_t[b] = tr.m1 * tr.r1
+            if identified_t[b]:
+                ai, mem_i = _grouped_rows(s.n, tr.act_idx,
+                                          2 * max(1, int(f_t_arr[b])) + 1,
+                                          st.rng)
+                tam = streams.phase2_hits(b, t)
+                if recorder is not None:
+                    if rec_sh2 is None:
+                        rec_sh2 = zero_sh2.copy()
+                        rec_gr2 = zero_gr2.copy()
+                        rec_m2 = zero_m2.copy()
+                        rec_tam2 = zero_tam.copy()
+                    k = len(ai.shard_of_worker)
+                    rec_sh2[b, :k] = ai.shard_of_worker
+                    rec_gr2[b, :k] = ai.group_of_worker
+                    rec_m2[b] = ai.num_shards
+                    if tam:
+                        rec_tam2[b, tam] = True
+                used_t[b] += ai.num_shards
+                comp_t[b] += ai.num_shards * ai.replication
+                newly = np.flatnonzero(tr_faulty2[t, b])
+                if newly.size:
+                    st.on_identified(newly)
+                    for w_id in newly:
+                        tr.ident_step[int(w_id)] = t
+                    f_t_arr[b] = max(0, s.f - st.kappa)
+                    dirty_trials.append(b)
+                agg_weight[b] = 0.0
+            else:
+                st.on_clean_check(tr.mem1.ravel())
+                agg_weight[b] = batch_a.weight[b]
+
+        if recorder is not None:
+            recorder.on_step(
+                live=live, checks=checks,
+                vote1=np.zeros(B, bool),
+                shard1=shard_all, group1=group_all,
+                m1=np.asarray(m_all, np.int64),
+                aggw=agg_weight, tam1=tam1,
+                identify=identified_t,
+                shard2=zero_sh2 if rec_sh2 is None else rec_sh2,
+                group2=zero_gr2 if rec_gr2 is None else rec_gr2,
+                m2=zero_m2 if rec_m2 is None else rec_m2,
+                tam2=zero_tam if rec_tam2 is None else rec_tam2,
+                active=bstate.active.copy(),
+            )
+
+        used_acc += used_t
+        comp_acc += comp_t
+        check_acc += checks
         ident_acc += identified_t
         eff_hist[:, t] = used_t / np.maximum(1, comp_t)
 

@@ -66,12 +66,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import adaptive, rngstream
 from repro.core.detection import detect_groups_batched
 from repro.core.engine import (
     BatchResult,
     ScheduleRecorder,
     TrialSpec,
+    device_schedulable,
+    replay_control_from_trace,
     run_batch,
+    spec_display_names,
 )
 from repro.core.simulation import make_problem
 
@@ -163,6 +167,7 @@ class Schedule:
     arrays: dict[str, np.ndarray]
     control: BatchResult
     used_proxy: bool
+    mode: str = "oracle"
 
 
 def build_schedule(specs: list[TrialSpec], mode: str = "auto") -> Schedule:
@@ -172,20 +177,28 @@ def build_schedule(specs: list[TrialSpec], mode: str = "auto") -> Schedule:
     (engine.replay_control_fast) — no data plane at all, the fast path
     for fixed-q value-independent trial classes; "proxy" forces the
     tiny-problem full-engine replay (same schedule, kept as the parity
-    oracle for "vector"); "oracle" forces the real-problem replay (the
-    only valid choice for value-dependent trials); "auto" picks
-    "vector" whenever valid.
+    oracle for "vector"); "oracle" forces the real-problem replay (a
+    full numpy-engine pass — valid for every trial class, but the
+    replay then costs the thing it schedules); "auto" picks "vector"
+    whenever valid.  Mode "device" is not a host schedule: it is
+    handled by ``run_batch_jax`` itself (the decisions come back from
+    the on-device control plane and this host machinery replays *from
+    that trace* — see ``engine.replay_control_from_trace``).
     """
     eligible = all(proxy_schedulable(s) for s in specs)
     if mode == "auto":
         mode = "vector" if eligible else "oracle"
     if mode in ("proxy", "vector") and not eligible:
-        bad = [s.label or i for i, s in enumerate(specs)
-               if not proxy_schedulable(s)]
+        flags = [not proxy_schedulable(s) for s in specs]
         raise ValueError(
-            f"{mode} schedule invalid for value-dependent trials: {bad}")
+            f"{mode} schedule invalid for value-dependent trials: "
+            f"{spec_display_names(specs, flags)} — use schedule=\"device\" "
+            f"(on-device control plane) or \"oracle\" for these")
     if mode not in ("proxy", "oracle", "vector"):
-        raise ValueError(f"unknown schedule mode {mode!r}")
+        raise ValueError(
+            f"unknown schedule mode {mode!r} (build_schedule handles "
+            f"host modes auto/vector/proxy/oracle; \"device\" lives in "
+            f"run_batch_jax)")
 
     rec = ScheduleRecorder()
     if mode == "vector":
@@ -200,7 +213,7 @@ def build_schedule(specs: list[TrialSpec], mode: str = "auto") -> Schedule:
         control = run_batch(ctrl_specs, _recorder=rec)
     keys = rec.steps[0].keys() if rec.steps else ()
     arrays = {k: np.stack([st[k] for st in rec.steps]) for k in keys}
-    return Schedule(arrays, control, mode != "oracle")
+    return Schedule(arrays, control, mode != "oracle", mode)
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +416,182 @@ _device_scan = functools.partial(
 
 
 # ---------------------------------------------------------------------------
+# On-device control plane: schedule="device"
+# ---------------------------------------------------------------------------
+#
+# The host-schedule modes above precompute every decision on the host and
+# scan a dense (T, B, ...) schedule.  For value-dependent classes that
+# precompute is a full numpy-engine pass ("oracle") — the very thing the
+# backend exists to avoid.  The device control plane folds the decisions
+# into the scan instead: losses, λ_t = 1 − e^{−ℓ_t}, the closed-form
+# q*_t (repro.core.adaptive.q_star_arr), the check/tamper coins and
+# replica-group permutations (repro.core.rngstream threefry streams,
+# bit-identical to the numpy engine's rng="device" contract), sketch-
+# domain detection verdicts, and the reactive regroup/vote/elimination
+# transitions — all inside the jitted lax.scan, with the (W, active,
+# kappa) protocol state as the scan carry.  The host sees only the
+# per-step decision trace (q_t, check, detect, faulty2) afterwards and
+# reconstructs meters/assignments/schedule from it EXACTLY via
+# engine.replay_control_from_trace; the numpy engine run with
+# rng="device" is the differential-parity oracle
+# (tests/test_engine_differential.py).
+
+_PH1 = np.uint32(1 << 16)     # phase-1 counter bit (identify pass)
+
+
+def _device_ctl_core(A, y, W0, stat, com, noisevec, pid, *, shared: bool,
+                     has_bias: bool, impl: str | None):
+    """Protocol loop with the control plane fused into the scan.
+
+    ``stat`` carries per-trial statics: problem/attack scalars, the
+    threefry key words of the three decision streams, the Byzantine
+    mask and the initial active mask.  ``com`` is scanned (leading T):
+    the pre-sketched data rows plus the step index.  Carry =
+    (W, active, kappa); per-step outputs = (loss, q_t, check, detect,
+    faulty2) — the decision trace the host replays from."""
+    from repro.kernels import ops
+
+    n_data = A.shape[-2]
+    B, n_max = stat["byz"].shape
+    lr, alpha, beta, nu = stat["lr"], stat["alpha"], stat["beta"], stat["nu"]
+    p32 = stat["p"]
+    wi_b = jnp.broadcast_to(jnp.arange(n_max, dtype=jnp.uint32), (B, n_max))
+    zero_u = jnp.zeros((B,), jnp.uint32)
+
+    def contract(cr):                  # (B, I) row weights -> (B, d)
+        if shared:
+            return jnp.einsum("bi,id->bd", cr, A)
+        return ops.batched_coded_encode(cr[:, None, :], A, impl=impl)[:, 0]
+
+    def agg_value(coeff, tam, mask, cr_base):
+        aeff = jnp.where(tam, alpha[:, None], 1.0) * coeff
+        upd = contract(jnp.einsum("bw,bwi->bi", aeff, mask) * cr_base)
+        if has_bias:
+            tw = coeff * tam
+            upd = upd + (tw * beta[:, None]).sum(axis=1)[:, None] \
+                + (tw * nu[:, None]).sum(axis=1)[:, None] * noisevec[None]
+        return upd
+
+    def symbols(mask, cr_base, tam, SA_t, sk_one, sk_noise):
+        C = mask * cr_base[:, None, :]                       # (B, n, I)
+        skw = jnp.einsum("bwi,bik->bwk", C, SA_t[pid])
+        if has_bias:
+            add = beta[:, None, None] * sk_one[None, None] \
+                + nu[:, None, None] * sk_noise[None, None]
+        else:
+            add = 0.0
+        return jnp.where(tam[:, :, None],
+                         alpha[:, None, None] * skw + add, skw)
+
+    def step(carry, c):
+        W, active, kappa = carry
+        t = c["tix"]
+        t32 = t.astype(jnp.uint32)
+        live = t < stat["steps"]                              # (B,)
+
+        if shared:
+            resid = jnp.einsum("id,bd->bi", A, W) - y[None, :]
+        else:
+            resid = jnp.einsum("bid,bd->bi", A, W) - y
+        loss = (resid * resid).mean(axis=1)
+
+        # -- q*_t and the check coin (rngstream DECIDE) ----------------
+        f_t = jnp.maximum(stat["f0"] - kappa, 0)              # (B,) i32
+        lam = adaptive.lam_from_loss_arr(loss, jnp)
+        qad = adaptive.q_star_arr(f_t, p32, lam, jnp)
+        qvec = jnp.where(stat["qcode"] == 1, jnp.float32(1.0), stat["qfix"])
+        qvec = jnp.where(f_t > 0, qvec, 0.0)
+        q_t = jnp.where(stat["qcode"] == 3, qad,
+                        jnp.where(stat["qcode"] == 0, 0.0, qvec))
+        q_t = q_t.astype(jnp.float32)
+        db, _ = rngstream.threefry2x32(stat["dk0"], stat["dk1"],
+                                       jnp.broadcast_to(t32, (B,)), zero_u)
+        check = live & (rngstream.uniform01(db) < q_t)
+
+        # -- tamper coins, both phases (rngstream TAMPER) --------------
+        tb0, _ = rngstream.threefry2x32(stat["tk0"][:, None],
+                                        stat["tk1"][:, None], t32, wi_b)
+        tb1, _ = rngstream.threefry2x32(stat["tk0"][:, None],
+                                        stat["tk1"][:, None], t32,
+                                        _PH1 | wi_b)
+        elig = stat["byz"] & (live & (t >= stat["onset"]))[:, None]
+        tam1 = elig & (rngstream.uniform01(tb0) < p32[:, None])
+
+        # -- phase-1 layout: masked regroup when checking, else fast ---
+        pk0, _ = rngstream.threefry2x32(stat["pk0"][:, None],
+                                        stat["pk1"][:, None], t32, wi_b)
+        pk1, _ = rngstream.threefry2x32(stat["pk0"][:, None],
+                                        stat["pk1"][:, None], t32,
+                                        _PH1 | wi_b)
+        r1 = jnp.maximum(f_t, 1) + 1
+        sh_c, gr_c, m_c = ops.batched_regroup(pk0, active, r1)
+        rank = jnp.cumsum(active, axis=1, dtype=jnp.int32) - 1
+        n_act = active.sum(axis=1).astype(jnp.int32)
+        chk = check[:, None]
+        shard1 = jnp.where(chk, sh_c, jnp.where(active, rank, 0))
+        group1 = jnp.where(chk, gr_c, jnp.where(active, rank, -1))
+        group1 = jnp.where(live[:, None], group1, -1)
+        m1 = jnp.where(check, m_c, n_act)
+        mask1, rows1 = _shard_mask(shard1, group1, m1, n_data)
+        cr1 = resid * (2.0 / rows1)[:, None]
+
+        # -- detection verdict on sketch symbols -----------------------
+        skt1 = symbols(mask1, cr1, tam1, c["SA"], c["sk_one"], c["sk_noise"])
+        fault, _ = detect_groups_batched(skt1, group1, tau=TAU_DETECT)
+        det = check & fault
+
+        # -- aggregation (fast + clean-check; detect trials defer) -----
+        w_per = 1.0 / jnp.maximum(m1 * jnp.where(check, r1, 1),
+                                  1).astype(jnp.float32)
+        aggw = jnp.where(group1 >= 0, w_per[:, None], 0.0)
+        aggw = jnp.where(det[:, None], 0.0, aggw)
+        upd = agg_value(aggw, tam1, mask1, cr1)
+
+        # -- identify round: regroup at 2 max(f_t,1)+1, vote, eliminate
+        tam2 = det[:, None] & elig \
+            & (rngstream.uniform01(tb1) < p32[:, None])
+        r2 = 2 * jnp.maximum(f_t, 1) + 1
+
+        def identify(_):
+            sh2, gr2, m2 = ops.batched_regroup(pk1, active, r2)
+            gr2 = jnp.where(det[:, None], gr2, -1)
+            mask2, rows2 = _shard_mask(sh2, gr2, m2, n_data)
+            cr2 = resid * (2.0 / rows2)[:, None]
+            skt2 = symbols(mask2, cr2, tam2, c["SA"], c["sk_one"],
+                           c["sk_noise"])
+            wc, faulty = ops.batched_vote(skt2, gr2, tau=TAU_VOTE, impl=impl)
+            coeff = jnp.where(det[:, None],
+                              wc / jnp.maximum(m2, 1)[:, None], 0.0)
+            return agg_value(coeff, tam2, mask2, cr2), \
+                det[:, None] & faulty & (gr2 >= 0)
+
+        upd2, faulty2 = jax.lax.cond(
+            det.any(), identify,
+            lambda _: (jnp.zeros_like(W0), jnp.zeros((B, n_max), bool)),
+            None)
+        upd = upd + upd2
+
+        W = jnp.where(live[:, None], W - lr[:, None] * upd, W)
+        active = active & ~faulty2
+        kappa = kappa + faulty2.sum(axis=1).astype(kappa.dtype)
+        return (W, active, kappa), (loss, jnp.where(live, q_t, 0.0),
+                                    check, det, faulty2)
+
+    B_ = stat["byz"].shape[0]
+    init = (W0, stat["act0"], jnp.zeros(B_, jnp.int32))
+    (W, _, _), ys = jax.lax.scan(step, init, com)
+    losses, q_tr, check_tr, det_tr, faulty2_tr = ys
+    return W, losses, q_tr, check_tr, det_tr, faulty2_tr
+
+
+_device_ctl_scan = functools.partial(
+    jax.jit,
+    static_argnames=("shared", "has_bias", "impl"),
+    donate_argnames=("W0",),
+)(_device_ctl_core)
+
+
+# ---------------------------------------------------------------------------
 # Multi-device: shard the trial batch over a 1-D "trials" mesh
 # ---------------------------------------------------------------------------
 #
@@ -416,12 +605,9 @@ _device_scan = functools.partial(
 
 def _trial_spec(ndim: int, axis: int | None):
     """Full-rank PartitionSpec sharding ``axis`` over "trials"."""
-    from jax.sharding import PartitionSpec
+    from repro.sharding import trial_partition_spec
 
-    spec: list = [None] * ndim
-    if axis is not None:
-        spec[axis] = "trials"
-    return PartitionSpec(*spec)
+    return trial_partition_spec(ndim, axis)
 
 
 @functools.lru_cache(maxsize=32)
@@ -454,6 +640,34 @@ def _sharded_scan(mesh, shared: bool, has_filter: bool, has_bias: bool,
     return jax.jit(fn, donate_argnums=(2, 3, 4)), in_specs
 
 
+@functools.lru_cache(maxsize=32)
+def _sharded_device_ctl(mesh, shared: bool, has_bias: bool, impl: str | None,
+                        stat_sig: tuple, com_sig: tuple, a_ndim: int):
+    """shard_map-wrapped device-control-plane scan for a mesh.
+
+    The carry's protocol state (W, active mask, kappa) and every stat
+    array shard on the trial axis, so the scan runs collective-free:
+    each device owns its trials' control state end to end."""
+    from repro.sharding import shard_map
+
+    in_specs = (
+        _trial_spec(a_ndim, None if shared else 0),        # A
+        _trial_spec(a_ndim - 1, None if shared else 0),    # y
+        _trial_spec(2, 0),                                 # W0
+        {k: _trial_spec(nd, 0) for k, nd in stat_sig},
+        {k: _trial_spec(nd, None) for k, nd in com_sig},   # replicated
+        _trial_spec(1, None),                              # noisevec
+        _trial_spec(1, 0),                                 # pid
+    )
+    out_specs = (_trial_spec(2, 0), _trial_spec(2, 1), _trial_spec(2, 1),
+                 _trial_spec(2, 1), _trial_spec(2, 1), _trial_spec(3, 1))
+    body = functools.partial(_device_ctl_core, shared=shared,
+                             has_bias=has_bias, impl=impl)
+    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                   axis_names={"trials"}, check_vma=False)
+    return jax.jit(fn, donate_argnums=(2,)), in_specs
+
+
 def _pad_rows(arr: np.ndarray, axis: int, pad: int, fill=0) -> np.ndarray:
     """Pad ``arr`` with ``fill`` along ``axis`` (idle-trial padding)."""
     if pad == 0:
@@ -479,8 +693,14 @@ def run_batch_jax(specs, *, schedule: str = "auto",
                   mesh="auto") -> BatchResult:
     """Run B protocol trials with the jitted on-device data plane.
 
-    schedule: "auto" | "vector" | "proxy" | "oracle" (see
-        ``build_schedule``).
+    schedule: "auto" | "vector" | "proxy" | "oracle" (host control
+        plane; see ``build_schedule``) | "device" (control plane fused
+        into the scan — the only non-oracle option for value-dependent
+        classes like adaptive q*_t; requires
+        ``engine.device_schedulable`` trials and uses the
+        ``rng="device"`` counter-RNG streams, so its parity oracle is
+        ``run_batch(specs, rng="device")``, not the default host
+        streams).
     kernel_impl: None (auto: Pallas on TPU, XLA elsewhere) | "pallas" |
         "xla" — forwarded to the batched kernel ops.
     chunk_trials: trials per device pass (default: memory-sized; only
@@ -500,7 +720,11 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     The returned ``BatchResult`` additionally carries ``schedule`` (the
     control plane) and ``detect_flags`` (T, B) — the scan's on-device
     sketch-detection verdicts per iteration, validated against the
-    schedule's check outcomes in tests/test_engine_parity.py.
+    schedule's check outcomes in tests/test_engine_parity.py.  Under
+    ``schedule="device"`` it also carries ``device_trace``, the raw
+    per-step decision trace (q / check / detect / faulty2 arrays) the
+    host control replay was reconstructed from; host modes set it to
+    ``None``.
     """
     from repro.kernels import ops
 
@@ -512,19 +736,42 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     # so a mid-process REPRO_KERNEL_IMPL change must not split the run
     kernel_impl = ops.resolve_impl(kernel_impl)
     _validate(specs)
-    sched = build_schedule(specs, schedule)
     B = len(specs)
-    if not sched.arrays:
+    device_mode = schedule == "device"
+    if device_mode:
+        flags = [not device_schedulable(s) for s in specs]
+        if any(flags):
+            raise ValueError(
+                'schedule="device" needs device-schedulable trials '
+                "(affine string attacks, mode none/deterministic/"
+                "randomized, no selective checks or membership events); "
+                f"offending: {spec_display_names(specs, flags)}")
+        sched = None
+        T = max(s.steps for s in specs)
+        n_max = max(s.n for s in specs)
+    else:
+        sched = build_schedule(specs, schedule)
+        T = len(sched.arrays["live"]) if sched.arrays else 0
+        n_max = sched.arrays["shard1"].shape[2] if sched.arrays else 0
+    if T == 0:
         # every trial has steps == 0: nothing to scan, and a proxy
         # control pass would carry proxy-problem iterates — rerun the
         # numpy engine on the real specs (free at zero steps), keeping
         # the documented jax-backend extras attached (empty here)
         out = run_batch(specs)
         out.detect_flags = np.zeros((0, B), bool)
-        out.schedule = sched
+        if device_mode:
+            trace = dict(q=np.zeros((0, B), np.float32),
+                         check=np.zeros((0, B), bool),
+                         detect=np.zeros((0, B), bool),
+                         faulty2=np.zeros((0, B, n_max), bool))
+            control = replay_control_from_trace(specs, trace)
+            out.device_trace = trace
+            out.schedule = Schedule({}, control, True, "device")
+        else:
+            out.device_trace = None
+            out.schedule = sched
         return out
-    T = len(sched.arrays["live"])
-    n_max = sched.arrays["shard1"].shape[2]
 
     # -- real problem arrays (f32 device copies) -------------------------
     problems: dict[tuple, tuple] = {}
@@ -557,27 +804,62 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     has_bias = bool((abn[:, 1:] != 0).any())
     noisevec = (np.random.default_rng(0).normal(size=d).astype(np.float32)
                 if (abn[:, 2] != 0).any() else np.zeros(d, np.float32))
-    fcode = np.array([_FILTER_CODES.get(_filter_name(s), -1) for s in specs],
-                     np.int32)
-    has_filter = bool((fcode >= 0).any())
-    stat_np = dict(
+    base_stat = dict(
         lr=np.array([s.lr for s in specs], np.float32),
         alpha=abn[:, 0].copy(), beta=abn[:, 1].copy(), nu=abn[:, 2].copy(),
-        fcode=fcode, farr=np.array([max(1, s.f) for s in specs], np.int32),
     )
+    if device_mode:
+        has_filter = False
+        byz = np.zeros((B, n_max), bool)
+        act0 = np.zeros((B, n_max), bool)
+        skeys = {k: np.zeros(B, np.uint32)
+                 for k in ("dk0", "dk1", "tk0", "tk1", "pk0", "pk1")}
+        for b, s in enumerate(specs):
+            act0[b, :s.n] = True
+            if s.byz:
+                byz[b, list(s.byz)] = True
+            for pre, tag in (("d", rngstream.DECIDE),
+                             ("t", rngstream.TAMPER),
+                             ("p", rngstream.PERM)):
+                k0, k1 = rngstream.key_for(s.seed, tag)
+                skeys[pre + "k0"][b] = k0
+                skeys[pre + "k1"][b] = k1
+        stat_np = dict(
+            base_stat,
+            p=np.array([s.p_tamper for s in specs], np.float32),
+            qfix=np.array([0.0 if s.q is None else float(s.q)
+                           for s in specs], np.float32),
+            qcode=np.array([3 if _is_adaptive(s) else
+                            {"none": 0, "deterministic": 1,
+                             "randomized": 2}[s.mode] for s in specs],
+                           np.int32),
+            f0=np.array([s.f for s in specs], np.int32),
+            onset=np.array([s.onset for s in specs], np.int32),
+            steps=np.array([s.steps for s in specs], np.int32),
+            byz=byz, act0=act0, **skeys,
+        )
+        xs_np = None
+    else:
+        fcode = np.array([_FILTER_CODES.get(_filter_name(s), -1)
+                          for s in specs], np.int32)
+        has_filter = bool((fcode >= 0).any())
+        stat_np = dict(
+            base_stat, fcode=fcode,
+            farr=np.array([max(1, s.f) for s in specs], np.int32),
+        )
 
-    # -- stacked schedule -> scan xs --------------------------------------
-    a = sched.arrays
-    xs_np = dict(
-        live=a["live"], checks=a["checks"], vote1=a["vote1"],
-        identify=a["identify"],
-        m1=a["m1"].astype(np.int32), shard1=a["shard1"].astype(np.int32),
-        group1=a["group1"].astype(np.int32),
-        aggw=a["aggw"].astype(np.float32), tam1=a["tam1"],
-        m2=a["m2"].astype(np.int32), shard2=a["shard2"].astype(np.int32),
-        group2=a["group2"].astype(np.int32), tam2=a["tam2"],
-        active=a["active"],
-    )
+        # -- stacked schedule -> scan xs ----------------------------------
+        a = sched.arrays
+        xs_np = dict(
+            live=a["live"], checks=a["checks"], vote1=a["vote1"],
+            identify=a["identify"],
+            m1=a["m1"].astype(np.int32), shard1=a["shard1"].astype(np.int32),
+            group1=a["group1"].astype(np.int32),
+            aggw=a["aggw"].astype(np.float32), tam1=a["tam1"],
+            m2=a["m2"].astype(np.int32), shard2=a["shard2"].astype(np.int32),
+            group2=a["group2"].astype(np.int32), tam2=a["tam2"],
+            active=a["active"],
+        )
 
     # -- pre-sketched data rows for in-scan detection symbols -------------
     # sketches are linear, so a worker's symbol is its residual-coefficient
@@ -601,6 +883,10 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         "sk_one": sk_rows[:, -2],
         "sk_noise": sk_rows[:, -1],
     }
+    if device_mode:
+        # the device control plane scans the step index alongside the
+        # pre-sketched rows (its only per-step host input)
+        common["tix"] = jnp.arange(T, dtype=jnp.int32)
 
     # -- trials mesh: shard the batch dimension across local devices ------
     if isinstance(mesh, str):
@@ -628,9 +914,14 @@ def run_batch_jax(specs, *, schedule: str = "auto",
 
     # -- scan fn + device placement of the chunk-invariant operands -------
     if mesh is None:
-        scan_fn = functools.partial(
-            _device_scan, shared=shared, has_filter=has_filter,
-            has_bias=has_bias, impl=kernel_impl)
+        if device_mode:
+            scan_fn = functools.partial(
+                _device_ctl_scan, shared=shared, has_bias=has_bias,
+                impl=kernel_impl)
+        else:
+            scan_fn = functools.partial(
+                _device_scan, shared=shared, has_filter=has_filter,
+                has_bias=has_bias, impl=kernel_impl)
         # non-shared problems upload per-chunk slices in _stage — a full
         # (B, n_data, d) upfront copy would defeat the chunk memory bound
         A_dev = jnp.asarray(A_np) if shared else None
@@ -640,47 +931,64 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         in_specs = None
     else:
         stat_sig = tuple((k, v.ndim) for k, v in sorted(stat_np.items()))
-        xs_sig = tuple((k, v.ndim) for k, v in sorted(xs_np.items()))
         com_sig = tuple((k, int(v.ndim)) for k, v in sorted(common.items()))
-        scan_fn, in_specs = _sharded_scan(
-            mesh, shared, has_filter, has_bias, kernel_impl,
-            stat_sig, xs_sig, com_sig, A_np.ndim)
+        if device_mode:
+            scan_fn, in_specs = _sharded_device_ctl(
+                mesh, shared, has_bias, kernel_impl,
+                stat_sig, com_sig, A_np.ndim)
+        else:
+            xs_sig = tuple((k, v.ndim) for k, v in sorted(xs_np.items()))
+            scan_fn, in_specs = _sharded_scan(
+                mesh, shared, has_filter, has_bias, kernel_impl,
+                stat_sig, xs_sig, com_sig, A_np.ndim)
         from jax.sharding import NamedSharding
 
         ns = lambda spec: NamedSharding(mesh, spec)              # noqa: E731
         put = lambda tree, spec: jax.device_put(                 # noqa: E731
             tree, jax.tree.map(ns, spec))
+        # device-mode arg order drops xs: (A, y, W0, stat, com, noise, pid)
+        i_com, i_noise, i_pid = (4, 5, 6) if device_mode else (5, 6, 7)
         A_dev = put(A_np, in_specs[0]) if shared else None
         y_dev = put(y_np, in_specs[1]) if shared else None
-        com_dev = put(common, in_specs[5])
-        noise_dev = put(noisevec, in_specs[6])
+        com_dev = put(common, in_specs[i_com])
+        noise_dev = put(noisevec, in_specs[i_noise])
 
     def _stage(lo: int):
         """H2D-transfer one chunk's per-trial arrays (async)."""
         hi = min(lo + chunk_trials, B)
         bs = hi - lo
         pad = (-bs) % ndev
-        xs_c = {k: _pad_rows(v[:, lo:hi], 1, pad, _PAD_FILL.get(k, 0))
-                for k, v in xs_np.items()}
         stat_c = {k: _pad_rows(v[lo:hi], 0, pad, _PAD_FILL.get(k, 0))
                   for k, v in stat_np.items()}
+        xs_c = None if device_mode else {
+            k: _pad_rows(v[:, lo:hi], 1, pad, _PAD_FILL.get(k, 0))
+            for k, v in xs_np.items()}
         W0 = np.zeros((bs + pad, d), np.float32)
         pid_c = _pad_rows(pid_np[lo:hi], 0, pad)
         if mesh is None:
-            args = (A_dev if shared else jnp.asarray(A_np[lo:hi]),
-                    y_dev if shared else jnp.asarray(y_np[lo:hi]),
-                    jnp.asarray(W0),
-                    {k: jnp.asarray(v) for k, v in stat_c.items()},
-                    {k: jnp.asarray(v) for k, v in xs_c.items()},
-                    com_dev, noise_dev, jnp.asarray(pid_c))
+            A_c = A_dev if shared else jnp.asarray(A_np[lo:hi])
+            y_c = y_dev if shared else jnp.asarray(y_np[lo:hi])
+            stat_d = {k: jnp.asarray(v) for k, v in stat_c.items()}
+            if device_mode:
+                args = (A_c, y_c, jnp.asarray(W0), stat_d,
+                        com_dev, noise_dev, jnp.asarray(pid_c))
+            else:
+                args = (A_c, y_c, jnp.asarray(W0), stat_d,
+                        {k: jnp.asarray(v) for k, v in xs_c.items()},
+                        com_dev, noise_dev, jnp.asarray(pid_c))
         else:
             A_c = A_dev if shared else put(
                 _pad_rows(A_np[lo:hi], 0, pad), in_specs[0])
             y_c = y_dev if shared else put(
                 _pad_rows(y_np[lo:hi], 0, pad), in_specs[1])
-            args = (A_c, y_c, put(W0, in_specs[2]),
-                    put(stat_c, in_specs[3]), put(xs_c, in_specs[4]),
-                    com_dev, noise_dev, put(pid_c, in_specs[7]))
+            if device_mode:
+                args = (A_c, y_c, put(W0, in_specs[2]),
+                        put(stat_c, in_specs[3]),
+                        com_dev, noise_dev, put(pid_c, in_specs[6]))
+            else:
+                args = (A_c, y_c, put(W0, in_specs[2]),
+                        put(stat_c, in_specs[3]), put(xs_c, in_specs[4]),
+                        com_dev, noise_dev, put(pid_c, in_specs[7]))
         return slice(lo, hi), bs, args
 
     # -- async chunk pipeline, depth 1: dispatch chunk k's scan, start
@@ -690,9 +998,19 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     W = np.empty((B, d), np.float64)
     losses = np.empty((T, B))
     det = np.empty((T, B), bool)
+    if device_mode:
+        q_tr = np.empty((T, B), np.float32)
+        check_tr = np.empty((T, B), bool)
+        faulty2_tr = np.empty((T, B, n_max), bool)
 
     def _drain(sl, bs, out):                     # gathers; blocks
-        Wc, lc, dc = out
+        if device_mode:
+            Wc, lc, qc, cc, dc, fc = out
+            q_tr[:, sl] = np.asarray(qc)[:, :bs]
+            check_tr[:, sl] = np.asarray(cc)[:, :bs]
+            faulty2_tr[:, sl] = np.asarray(fc)[:, :bs]
+        else:
+            Wc, lc, dc = out
         W[sl] = np.asarray(Wc, np.float64)[:bs]
         losses[:, sl] = np.asarray(lc, np.float64)[:, :bs]
         det[:, sl] = np.asarray(dc)[:, :bs]
@@ -713,6 +1031,19 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     # -- materialize results: control plane + device values ---------------
     from repro.core.simulation import SimResult
 
+    trace = None
+    if device_mode:
+        # reconstruct the full host control plane from the decision
+        # trace (exact — the streams are counter-indexed, so schedule,
+        # meters and eliminations are pure functions of the trace)
+        trace = dict(q=q_tr, check=check_tr, detect=det.copy(),
+                     faulty2=faulty2_tr)
+        rec = ScheduleRecorder()
+        control = replay_control_from_trace(specs, trace, rec)
+        keys = rec.steps[0].keys() if rec.steps else ()
+        arrays = {k: np.stack([st[k] for st in rec.steps]) for k in keys}
+        sched = Schedule(arrays, control, True, "device")
+
     results = []
     for b, (s, ctrl) in enumerate(zip(specs, sched.control.results)):
         results.append(SimResult(
@@ -726,4 +1057,5 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     out = BatchResult(specs, results, time.perf_counter() - t_start)
     out.detect_flags = det
     out.schedule = sched
+    out.device_trace = trace
     return out

@@ -1,0 +1,177 @@
+"""Counter-based RNG stream contract shared by the host engine and the
+on-device control plane.
+
+The legacy streams (``decide_rng`` / ``default_rng(seed+1)`` tamper
+draws / ``ProtocolState.rng`` permutations) are PCG64 generators whose
+*positions* are value-dependent: a permutation is drawn only when a
+check actually fires, so a ``lax.scan`` — which must do the same work
+every step — cannot reproduce them.  This module defines the
+``rng="device"`` contract instead: every decision variate is a pure
+function of ``(seed, stream tag, step t, phase, worker w)`` through one
+threefry2x32 block, implemented twice — numpy ``uint32`` ops on the
+host, ``jnp.uint32`` ops inside the jitted scan — and bit-for-bit
+identical between the two (tests/test_golden_traces.py pins the bits).
+
+Streams (all keyed on the trial seed, domain-separated by tag):
+
+ * DECIDE — one uniform per step, counter ``(t, 0)``: the check coin.
+ * TAMPER — one uniform per (step, phase, worker), counter
+   ``(t, phase << 16 | w)``: phase 0 = main pass, phase 1 = identify
+   pass.  Unlike the legacy cursor stream, a worker's draw does not
+   depend on which other workers are active.
+ * PERM — one uint32 sort key per (step, phase, worker), same counter
+   layout: the replica-group permutation is the active workers sorted
+   by ``(key, worker id)`` (a stable argsort on the key restricted to
+   active workers).  Phase 0 keys the check regroup, phase 1 the
+   identify regroup.
+
+Uniforms take the top 24 bits of the first output word scaled by 2^-24:
+exactly representable in float32, so host (float64 numpy) and device
+(float32 scan) compare the *identical* value against q / p, and every
+fixed-q decision bit agrees exactly.  Only the adaptive q*_t itself is
+float-dtype-sensitive (f32 device loss vs f64 host loss), a documented
+~1e-7-per-step knife edge.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# stream tags (domain separation mixed into the high key word)
+DECIDE = np.uint32(0x0DEC1DE5)
+TAMPER = np.uint32(0x7A39B013)
+PERM = np.uint32(0x9E3779B1)
+
+_ROT = (13, 15, 26, 6, 17, 29, 16, 24)
+_PARITY = 0x1BD11BDA
+
+
+def _rotl(x, r):
+    # generic over numpy / jax.numpy uint32 arrays
+    return (x << r) | (x >> (32 - r))
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """The standard 20-round threefry-2x32 block: keys ``(k0, k1)``,
+    counter ``(c0, c1)`` -> two uint32 output words.  All inputs are
+    uint32 arrays (numpy or jax.numpy — the arithmetic is identical),
+    broadcast together."""
+    ks = (k0, k1, (k0 ^ k1) ^ _u32(k0, _PARITY))
+    x0 = c0 + ks[0]
+    x1 = c1 + ks[1]
+    for r in range(5):
+        for rot in _ROT[4 * (r % 2): 4 * (r % 2) + 4]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, rot) ^ x0
+        x0 = x0 + ks[(r + 1) % 3]
+        x1 = x1 + ks[(r + 2) % 3] + _u32(x1, r + 1)
+    return x0, x1
+
+
+def _u32(like, value):
+    """A uint32 constant in the array-library of ``like`` (numpy scalar
+    works for both: jnp promotes it like a weak uint32)."""
+    return np.uint32(value)
+
+
+def key_for(seed: int, tag) -> tuple[np.uint32, np.uint32]:
+    """Per-trial stream key: low/high words of the seed, tag XORed into
+    the high word."""
+    s = int(seed) & 0xFFFFFFFFFFFFFFFF
+    k0 = np.uint32(s & 0xFFFFFFFF)
+    k1 = np.uint32(s >> 32) ^ np.uint32(tag)
+    return k0, k1
+
+
+def uniform01(bits):
+    """Top-24-bit uniform in [0, 1): exact in float32 (and therefore in
+    float64), identical on host and device."""
+    import numpy as _np
+
+    f32 = (bits >> _u32(bits, 8)).astype(_np.float32)
+    return f32 * _np.float32(1.0 / (1 << 24))
+
+
+def counter(t, phase, w):
+    """Counter words for a (step, phase, worker) cell."""
+    return np.uint32(t), (np.uint32(phase) << np.uint32(16)) | np.uint32(w)
+
+
+# ---------------------------------------------------------------------------
+# Host-side vectorized blocks (numpy)
+# ---------------------------------------------------------------------------
+
+
+def decide_uniforms(seed: int, steps: int) -> np.ndarray:
+    """(steps,) float32 check coins — the ``rng="device"`` analogue of
+    ``decide_rng.random(steps)``."""
+    if steps == 0:
+        return np.zeros(0, np.float32)
+    k0, k1 = key_for(seed, DECIDE)
+    t = np.arange(steps, dtype=np.uint32)
+    x0, _ = threefry2x32(np.full_like(t, k0), np.full_like(t, k1),
+                         t, np.zeros_like(t))
+    return uniform01(x0)
+
+
+def _phase_worker_block(seed: int, steps: int, n: int, tag) -> np.ndarray:
+    """(steps, 2, n) uint32 first output words for a per-(t, phase, w)
+    stream."""
+    if steps == 0 or n == 0:
+        return np.zeros((steps, 2, n), np.uint32)
+    k0, k1 = key_for(seed, tag)
+    t = np.arange(steps, dtype=np.uint32)[:, None, None]
+    ph = np.arange(2, dtype=np.uint32)[None, :, None]
+    w = np.arange(n, dtype=np.uint32)[None, None, :]
+    c0 = np.broadcast_to(t, (steps, 2, n))
+    c1 = (ph << np.uint32(16)) | w
+    c1 = np.broadcast_to(c1, (steps, 2, n))
+    x0, _ = threefry2x32(np.full(c0.shape, k0), np.full(c0.shape, k1),
+                         np.ascontiguousarray(c0), np.ascontiguousarray(c1))
+    return x0
+
+
+def tamper_uniforms(seed: int, steps: int, n: int) -> np.ndarray:
+    """(steps, 2, n) float32 tamper coins (phase 0 = main pass, phase 1
+    = identify pass)."""
+    return uniform01(_phase_worker_block(seed, steps, n, TAMPER))
+
+
+def perm_keys(seed: int, steps: int, n: int) -> np.ndarray:
+    """(steps, 2, n) uint32 permutation sort keys."""
+    return _phase_worker_block(seed, steps, n, PERM)
+
+
+class StepClock:
+    """Shared step counter the engine advances once per iteration; the
+    per-trial ``CounterPermuter``s key their phase counters off it."""
+
+    __slots__ = ("t",)
+
+    def __init__(self):
+        self.t = -1
+
+
+class CounterPermuter:
+    """Duck-typed stand-in for ``ProtocolState.rng`` under the device
+    contract: ``permutation(act_idx)`` returns the active workers sorted
+    by their (PERM key, worker id) for the current ``(step, phase)``
+    cell.  The first call in a step consumes phase 0 (the check
+    regroup), the second phase 1 (the identify regroup) — mirroring the
+    engine's call order, but with counter-indexed draws so the result
+    never depends on *when* previous permutations were drawn."""
+
+    __slots__ = ("keys", "clock", "_t", "_phase")
+
+    def __init__(self, keys: np.ndarray, clock: StepClock):
+        self.keys = keys              # (steps, 2, n) uint32
+        self.clock = clock
+        self._t = -1
+        self._phase = 0
+
+    def permutation(self, act_idx: np.ndarray) -> np.ndarray:
+        if self.clock.t != self._t:
+            self._t = self.clock.t
+            self._phase = 0
+        k = self.keys[self._t, self._phase, act_idx]
+        self._phase += 1
+        return act_idx[np.argsort(k, kind="stable")]

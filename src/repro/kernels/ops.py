@@ -190,6 +190,66 @@ def batched_vote(replicas, group_of_worker, tau: float = 1e-5, *,
     return winner_coeff, faulty
 
 
+def batched_regroup(keys, active, repl):
+    """Masked replica regroup: the on-device control plane's assignment.
+
+    keys (B, n) uint32 per-worker sort keys (repro.core.rngstream PERM
+    stream); active (B, n) bool; repl (B,) int replication factor.
+    Each trial's active workers are ordered by (key, worker id) — the
+    counter-RNG analogue of ``rng.permutation(act_idx)`` via a stable
+    argsort, bit-identical to the host ``CounterPermuter`` — and the
+    first m*r of that order form m = n_active // r groups of r
+    consecutive workers.  Returns (shard (B, n) i32, group (B, n) i32
+    with -1 = idle, m (B,) i32).  Inactive workers and the < r
+    leftovers get group -1 / shard 0, matching
+    ``engine._grouped_rows``'s layout exactly.
+    """
+    B, n = active.shape
+    wi = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32), (B, n))
+    inact = (~active).astype(jnp.uint32)
+    # primary: active first; secondary: key; tertiary: worker id — the
+    # id tie-break reproduces the host's *stable* argsort on key ties
+    order = jnp.lexsort((wi, jnp.asarray(keys, jnp.uint32), inact))
+    rank = jnp.argsort(order, axis=-1)               # inverse permutation
+    r = jnp.maximum(jnp.asarray(repl, jnp.int32), 1)
+    m = (active.sum(axis=1).astype(jnp.int32) // r)
+    member = active & (rank < (m * r)[:, None])
+    gid = (rank // r[:, None]).astype(jnp.int32)
+    shard = jnp.where(member, gid, 0).astype(jnp.int32)
+    group = jnp.where(member, gid, -1).astype(jnp.int32)
+    return shard, group, m
+
+
+def batched_vote_masked(replicas, keys, active, repl, tau: float = 1e-5, *,
+                        gate=None, impl: str | None = None,
+                        interpret: bool | None = None):
+    """Masked-regroup variant of ``batched_vote``: group each trial's
+    active workers by the key permutation, then majority-vote per
+    group.  ``gate`` (B,) bool optionally idles whole trials (their
+    groups vote as -1).  Returns (winner_coeff, faulty, shard, group,
+    m) — the last three are ``batched_regroup``'s layout so callers can
+    reuse it for aggregation."""
+    shard, group, m = batched_regroup(keys, active, repl)
+    gv = group if gate is None else jnp.where(gate[:, None], group, -1)
+    wc, faulty = batched_vote(replicas, gv, tau=tau, impl=impl,
+                              interpret=interpret)
+    return wc, faulty, shard, group, m
+
+
+def batched_detect_masked(symbols, keys, active, repl, tau: float = 1e-9, *,
+                          gate=None):
+    """Masked-regroup variant of ``detection.detect_groups_batched``:
+    regroup, then flag trials whose replica groups mismatch on their
+    detection symbols.  Returns (trial_fault (B,), worker_mismatch
+    (B, n), shard, group, m)."""
+    from repro.core.detection import detect_groups_batched
+
+    shard, group, m = batched_regroup(keys, active, repl)
+    gv = group if gate is None else jnp.where(gate[:, None], group, -1)
+    fault, mism = detect_groups_batched(symbols, gv, tau=tau)
+    return fault, mism, shard, group, m
+
+
 def batched_coded_encode(coeffs, grads, *, impl: str | None = None,
                          interpret: bool | None = None):
     """(B, n_sym, m) @ (B, m, d) -> (B, n_sym, d) f32 per-trial encode."""

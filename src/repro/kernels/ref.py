@@ -93,6 +93,33 @@ def batched_pairwise_maxdiff_ref(replicas: jnp.ndarray) -> jnp.ndarray:
     return jax.vmap(pairwise_maxdiff_ref)(replicas)
 
 
+def batched_regroup_ref(keys, active, repl):
+    """numpy oracle for ``ops.batched_regroup``: per trial, order the
+    active worker ids by a stable argsort on their keys (the host
+    engine's ``CounterPermuter`` permutation contract) and group the
+    first m*r of them, ``engine._grouped_rows`` style."""
+    import numpy as np
+
+    keys = np.asarray(keys)
+    active = np.asarray(active)
+    repl = np.asarray(repl)
+    B, n = active.shape
+    shard = np.zeros((B, n), np.int32)
+    group = np.full((B, n), -1, np.int32)
+    m_out = np.zeros(B, np.int32)
+    for b in range(B):
+        act_idx = np.flatnonzero(active[b])
+        perm = act_idx[np.argsort(keys[b, act_idx], kind="stable")]
+        r = max(1, int(repl[b]))
+        m = len(perm) // r
+        m_out[b] = m
+        mem = perm[: m * r]
+        gid = np.repeat(np.arange(m, dtype=np.int32), r)
+        shard[b, mem] = gid
+        group[b, mem] = gid
+    return shard, group, m_out
+
+
 def batched_coded_encode_ref(coeffs: jnp.ndarray,
                              grads: jnp.ndarray) -> jnp.ndarray:
     """(B, n_sym, m) @ (B, m, d) -> (B, n_sym, d), f32 accum."""

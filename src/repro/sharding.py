@@ -112,6 +112,19 @@ def trials_mesh(max_devices: int | None = None) -> Mesh | None:
         return None
     return make_mesh((len(devs),), ("trials",), devices=devs)
 
+
+def trial_partition_spec(ndim: int, axis: int | None) -> P:
+    """Full-rank PartitionSpec sharding ``axis`` over the ``"trials"``
+    mesh axis (``None`` = fully replicated).  Shared by the scenario
+    engine's shard_map in/out specs: every per-trial operand — problem
+    slices, schedule arrays, and the on-device control plane's protocol
+    state (active mask, kappa, stream keys) — shards on its trial axis,
+    so the scan body needs no collectives."""
+    spec: list[Any] = [None] * ndim
+    if axis is not None:
+        spec[axis] = "trials"
+    return P(*spec)
+
 # ---------------------------------------------------------------------------
 # Default rule tables.
 #

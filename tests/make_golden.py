@@ -1,0 +1,100 @@
+"""Generate tests/golden/control_traces.npz — seeded golden control
+traces for one representative spec per SCENARIOS family, plus raw
+repro.core.rngstream blocks.
+
+The traces pin the engine's *control semantics*: check decisions,
+replica-group assignments, tamper hits, detection flags, identification
+events, isolation order, and (for device-schedulable specs) the
+counter-RNG stream the on-device control plane reproduces bit-for-bit.
+``tests/test_golden_traces.py`` regenerates everything in-process and
+fails loudly on any divergence: a mismatch means the RNG-stream or
+scheduling semantics changed and EVERY archived result is invalidated.
+
+Regenerate (only for an intentional semantic change):
+
+    PYTHONPATH=src python tests/make_golden.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.core import rngstream
+from repro.core.engine import (SCENARIOS, ScheduleRecorder,
+                               device_schedulable, run_batch)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "control_traces.npz")
+
+# one representative spec per family, by expand() label; steps truncated
+# so the archive stays small while still crossing every onset/event edge
+FAMILY_PICKS = {
+    "paper_core": ("randomized_q0.2/sign_flip/byz25/s0", 96),
+    "attack_sweep": ("adaptive/scale/byz25/s0", 96),
+    "late_onset": ("randomized_q0.3/sign_flip/onset50/s0", 96),
+    "elastic_churn": ("randomized_q0.3/sign_flip/crash17_recover1/s0", 96),
+    "selective": ("selective_q0.3/scale/byz6/s0", 96),
+}
+
+STREAM_SEED = 0xC0FFEE
+
+
+def _pick_spec(family: str):
+    label, steps = FAMILY_PICKS[family]
+    for s in SCENARIOS[family].expand():
+        if s.label == label:
+            return dataclasses.replace(s, steps=steps)
+    raise KeyError(f"label {label!r} not in SCENARIOS[{family!r}]")
+
+
+def _trace(spec, rng: str) -> dict[str, np.ndarray]:
+    rec = ScheduleRecorder()
+    res = run_batch([spec], rng=rng, _recorder=rec)[0]
+    out = {k: np.stack([stp[k] for stp in rec.steps])
+           for k in rec.steps[0]}
+    active = out["active"][:, 0]                     # (T, n)
+    alive_before = np.concatenate(
+        [np.ones((1,) + active.shape[1:], bool), active[:-1]])
+    first_out = np.where((alive_before & ~active).any(axis=0),
+                         np.argmax(alive_before & ~active, axis=0), -1)
+    out["isolation_step"] = first_out.astype(np.int64)  # per-worker
+    out["q_trace"] = np.asarray(res.q_trace)
+    ident = sorted(res.identify_step.items(), key=lambda kv: (kv[1], kv[0]))
+    out["identify_order"] = np.array(ident, np.int64).reshape(-1, 2)
+    out["identified"] = np.asarray(res.state.identified)
+    out["kappa"] = np.int64(res.state.kappa)
+    out["meter"] = np.array([res.state.meter.used, res.state.meter.computed,
+                             res.state.meter.iterations,
+                             res.state.meter.check_iterations,
+                             res.state.meter.identify_iterations], np.int64)
+    return out
+
+
+def build_golden() -> dict[str, np.ndarray]:
+    arrays: dict[str, np.ndarray] = {}
+    for family in FAMILY_PICKS:
+        spec = _pick_spec(family)
+        for key, val in _trace(spec, "host").items():
+            arrays[f"{family}|host|{key}"] = val
+        if device_schedulable(spec):
+            for key, val in _trace(spec, "device").items():
+                arrays[f"{family}|device|{key}"] = val
+    # raw counter-RNG blocks: the threefry contract itself, bit-for-bit
+    arrays["stream|decide"] = rngstream.decide_uniforms(STREAM_SEED, 16)
+    arrays["stream|tamper"] = rngstream.tamper_uniforms(STREAM_SEED, 6, 5)
+    arrays["stream|perm"] = rngstream.perm_keys(STREAM_SEED, 4, 5)
+    return arrays
+
+
+def main() -> None:
+    arrays = build_golden()
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    np.savez_compressed(GOLDEN_PATH, **arrays)
+    size = os.path.getsize(GOLDEN_PATH)
+    print(f"wrote {GOLDEN_PATH}: {len(arrays)} arrays, {size} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""Property-based differential testing: numpy engine vs jax backend.
+
+Random TrialSpecs (n, f, q-mode, attack class, steps, d) are generated
+and run through both engines; control quantities must match EXACTLY and
+float quantities to rtol/atol 1e-4.  Two stream contracts are covered:
+
+ * host streams — ``run_batch(specs)`` vs ``backend="jax"`` with the
+   auto host schedule (vector for value-independent batches, oracle
+   otherwise);
+ * device streams — ``run_batch(specs, rng="device")`` vs
+   ``backend="jax", schedule="device"`` (the on-device control plane),
+   including adaptive q*_t trials that never touch a host oracle.
+   Here the full stacked schedule arrays are compared bit-for-bit.
+
+When ``hypothesis`` is installed (the CI adaptive-smoke job), specs are
+drawn from shrinking-friendly strategies — a failing example minimizes
+to the smallest spec tuple exhibiting the divergence.  Without it (the
+bare tier-1 environment) the same pools are sampled from seeded numpy
+generators, so the differential coverage never silently disappears.
+
+Shape pools are deliberately tiny (steps <= 27, d in {4, 8}, B <= 3):
+every distinct (B, T, n_max, d) combination is a fresh XLA compile, and
+short horizons keep value-dependent detection away from the
+convergence floor where f32 sketch verdicts and f64 full-gradient
+verdicts may legitimately part ways (documented in
+docs/performance.md).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ScheduleRecorder, TrialSpec, run_batch
+from repro.core.engine_jax import AFFINE_ATTACKS
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 container: fall back to seeded sampling
+    HAVE_HYPOTHESIS = False
+
+FLOAT_RTOL = FLOAT_ATOL = 1e-4
+
+# bounded pools shared by the hypothesis strategies and the fallback
+# sampler (identical distributions, different drivers)
+ATTACKS = sorted(AFFINE_ATTACKS)
+STEPS_POOL = (0, 9, 27)
+D_POOL = (4, 8)
+P_POOL = (0.4, 0.8, 1.0)
+Q_POOL = (0.2, 0.5, 0.8)
+ONSET_POOL = (0, 3)
+DEVICE_MODES = ("randomized", "deterministic", "none")
+HOST_MODES = DEVICE_MODES + ("draco",)
+N_DATA = 32
+MAX_B = 3
+
+_FALLBACK_CASES = 8
+
+
+def _make_spec(pick, i: int, d: int, steps: int, *, host: bool) -> TrialSpec:
+    """Build one TrialSpec from a draw function ``pick(seq) -> element``.
+
+    ``pick`` is either a hypothesis draw over sampled_from or a seeded
+    numpy choice — both walk the identical pools, so the fallback
+    sampler covers the same space the strategies shrink over.
+    """
+    n = pick(range(3, 11))
+    f = pick(range(0, (n - 1) // 2 + 1))
+    # adversarial corners by construction: f may be 0, byz may be empty
+    # (zero active Byzantine workers) or a strict subset of the budget
+    byz = tuple(sorted(pick([(), tuple(range(f))] if f else [()])
+                       if pick([True, False]) else
+                       tuple(sorted({pick(range(n)) for _ in range(f)}))[:f]))
+    mode = pick(HOST_MODES if host else DEVICE_MODES)
+    adaptive = mode == "randomized" and pick([True, False])
+    q = None if (adaptive or mode in ("deterministic", "none", "draco")) \
+        else pick(Q_POOL)
+    return TrialSpec(
+        n=n, f=f, byz=byz, mode=mode, q=q,
+        attack=pick(ATTACKS), p_tamper=pick(P_POOL),
+        steps=steps, d=d, n_data=N_DATA,
+        seed=pick(range(0, 1 << 16)), onset=pick(ONSET_POOL),
+        label=f"case{i}",
+    )
+
+
+def _fallback_batch(case_seed: int, *, host: bool) -> list[TrialSpec]:
+    rng = np.random.default_rng((0xD1FF, case_seed, int(host)))
+    pick = lambda seq: (lambda s: s[rng.integers(len(s))])(list(seq))
+    d = pick(D_POOL)
+    steps = pick(STEPS_POOL)
+    return [_make_spec(pick, i, d, steps, host=host)
+            for i in range(int(rng.integers(1, MAX_B + 1)))]
+
+
+if HAVE_HYPOTHESIS:
+    def _batch_strategy(*, host: bool):
+        @st.composite
+        def batch(draw):
+            pick = lambda seq: draw(st.sampled_from(list(seq)))
+            d = pick(D_POOL)
+            steps = pick(STEPS_POOL)
+            b = draw(st.integers(1, MAX_B))
+            return [_make_spec(pick, i, d, steps, host=host)
+                    for i in range(b)]
+
+        return batch()
+
+    _SETTINGS = settings(
+        max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.function_scoped_fixture],
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared assertions
+# ---------------------------------------------------------------------------
+
+
+def _assert_control_equal(spec, rn, rj, *, q_exact: bool):
+    assert rn.identify_step == rj.identify_step, spec
+    assert np.array_equal(rn.state.active, rj.state.active), spec
+    assert np.array_equal(rn.state.identified, rj.state.identified), spec
+    assert rn.state.kappa == rj.state.kappa, spec
+    mn, mj = rn.state.meter, rj.state.meter
+    assert (mn.used, mn.computed, mn.iterations, mn.check_iterations,
+            mn.identify_iterations) == (
+        mj.used, mj.computed, mj.iterations, mj.check_iterations,
+        mj.identify_iterations), spec
+    qn, qj = np.asarray(rn.q_trace), np.asarray(rj.q_trace)
+    if q_exact:
+        assert np.array_equal(qn, qj), spec
+    else:
+        # adaptive q*_t flows through the device's f32 loss (a d-length
+        # f32 dot product), so its rounding scales with d — float
+        # contract, not exactness; decisions/control stay exact above
+        np.testing.assert_allclose(qj, qn, rtol=FLOAT_RTOL,
+                                   atol=FLOAT_ATOL, err_msg=str(spec))
+
+
+def _assert_floats_close(spec, rn, rj):
+    np.testing.assert_allclose(rj.w, np.asarray(rn.w),
+                               rtol=FLOAT_RTOL, atol=FLOAT_ATOL,
+                               err_msg=str(spec))
+    np.testing.assert_allclose(np.asarray(rj.losses), np.asarray(rn.losses),
+                               rtol=FLOAT_RTOL, atol=FLOAT_ATOL,
+                               err_msg=str(spec))
+
+
+def _check_host_streams(specs):
+    npb = run_batch(specs)
+    jxb = run_batch(specs, backend="jax")
+    for s, rn, rj in zip(specs, npb, jxb):
+        _assert_control_equal(s, rn, rj, q_exact=True)
+        _assert_floats_close(s, rn, rj)
+
+
+def _check_device_streams(specs):
+    rec = ScheduleRecorder()
+    npb = run_batch(specs, rng="device", _recorder=rec)
+    jxb = run_batch(specs, backend="jax", schedule="device")
+    for s, rn, rj in zip(specs, npb, jxb):
+        adaptive = s.q is None and s.mode == "randomized"
+        _assert_control_equal(s, rn, rj, q_exact=not adaptive)
+        _assert_floats_close(s, rn, rj)
+    # the reconstructed schedule must equal the numpy engine's recorded
+    # one bit-for-bit (vote1 is draco-only and device mode has none)
+    if rec.steps:
+        host_arrays = {k: np.stack([stp[k] for stp in rec.steps])
+                       for k in rec.steps[0]}
+        for k, v in host_arrays.items():
+            if k == "vote1":
+                continue
+            assert np.array_equal(v, jxb.schedule.arrays[k]), k
+    assert jxb.schedule.mode == "device"
+    assert sorted(jxb.device_trace) == ["check", "detect", "faulty2", "q"]
+
+
+# ---------------------------------------------------------------------------
+# the tests — hypothesis-driven when available, seeded sweep otherwise
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @_SETTINGS
+    @given(specs=_batch_strategy(host=True))
+    def test_differential_host_streams(specs):
+        _check_host_streams(specs)
+
+    @_SETTINGS
+    @given(specs=_batch_strategy(host=False))
+    def test_differential_device_streams(specs):
+        _check_device_streams(specs)
+
+else:
+
+    @pytest.mark.parametrize("case_seed", range(_FALLBACK_CASES))
+    def test_differential_host_streams(case_seed):
+        _check_host_streams(_fallback_batch(case_seed, host=True))
+
+    @pytest.mark.parametrize("case_seed", range(_FALLBACK_CASES))
+    def test_differential_device_streams(case_seed):
+        _check_device_streams(_fallback_batch(case_seed, host=False))
+
+
+# fixed regression corners that must hold in every environment,
+# hypothesis or not — the adversarial cases the issue names explicitly
+CORNER_BATCHES = [
+    # minimum quorum n = 2f+1, every Byzantine slot used
+    [TrialSpec(label="quorum", n=5, f=2, byz=(0, 1), mode="randomized",
+               q=0.5, attack="sign_flip", p_tamper=1.0, steps=9, d=4,
+               n_data=N_DATA, seed=3)],
+    # zero active Byzantine workers under a nonzero budget
+    [TrialSpec(label="nobyz", n=6, f=2, byz=(), mode="randomized", q=0.8,
+               attack="scale", p_tamper=0.8, steps=9, d=4, n_data=N_DATA,
+               seed=4)],
+    # adaptive q* with late onset and a value-dependent attack
+    [TrialSpec(label="adaptive", n=9, f=3, byz=(1, 5, 8), mode="randomized",
+               q=None, attack="zero", p_tamper=0.6, steps=27, d=8,
+               n_data=N_DATA, seed=42, onset=3)],
+    # B = 1 singleton batch, deterministic checks
+    [TrialSpec(label="b1", n=3, f=1, byz=(2,), mode="deterministic",
+               attack="drift", p_tamper=0.9, steps=9, d=4, n_data=N_DATA,
+               seed=7)],
+    # zero steps: the early-return path must populate device outputs
+    [TrialSpec(label="t0", n=5, f=1, byz=(2,), mode="randomized", q=0.4,
+               attack="drift", p_tamper=0.8, steps=0, d=4, n_data=N_DATA,
+               seed=1)],
+]
+
+
+@pytest.mark.parametrize("idx", range(len(CORNER_BATCHES)),
+                         ids=[b[0].label for b in CORNER_BATCHES])
+def test_differential_device_corners(idx):
+    _check_device_streams(CORNER_BATCHES[idx])
+
+
+def test_device_schedule_requires_eligible_specs():
+    """Value-dependent validation errors must name the offending spec."""
+    bad = TrialSpec(label="sel-trial", selective=True, q=0.4, byz=(2,),
+                    steps=5)
+    with pytest.raises(ValueError, match="sel-trial"):
+        run_batch([bad], backend="jax", schedule="device")
+    unlabeled = TrialSpec(mode="draco", q=None, byz=(2,), steps=5)
+    with pytest.raises(ValueError, match=r"spec\[0\]\(draco"):
+        run_batch([unlabeled], backend="jax", schedule="device")

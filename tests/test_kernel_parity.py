@@ -157,3 +157,178 @@ def test_batched_vote_matches_majority_vote_np(impl):
     # exactly one winner per group, none among idle workers
     assert coeff[0].sum() == 2 and coeff[1].sum() == 2
     assert not coeff[group < 0].any()
+
+
+# ---------------------------------------------------------------------------
+# property-based shape sweeps — hypothesis strategies when installed (the
+# CI adaptive-smoke job), seeded sampling from the SAME pools otherwise,
+# so the adversarial coverage also runs in the bare tier-1 environment.
+# Corners by construction: d off the 256-lane block / chunk boundaries,
+# B = 1 singleton batches, groups at the n = 2f+1 minimum quorum, trials
+# with zero active workers, and key ties that probe the stable sort.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+D_OFFBLOCK = (1, 7, 255, 257, 511)      # around the k=256 sketch block
+B_POOL = (1, 2, 5)
+R_POOL = (2, 3, 5)
+N_POOL = (2, 3, 5, 8, 9)
+_PROP_CASES = 6
+
+
+def _fallback_pick(case_seed, tag):
+    rng = np.random.default_rng((0x5EED, case_seed, tag))
+    return lambda seq: (lambda s: s[rng.integers(len(s))])(list(seq))
+
+
+def _layout_arrays(pick):
+    """(keys, active, repl) for a batch, with adversarial actives."""
+    B = pick(B_POOL)
+    n = pick(N_POOL)
+    rng = np.random.default_rng(pick(range(1 << 16)))
+    repl = np.array([pick(R_POOL) for _ in range(B)], np.int32)
+    tie = pick([True, False])
+    hi = 4 if tie else 1 << 32          # ties exercise the stable argsort
+    keys = rng.integers(0, hi, size=(B, n), dtype=np.uint32)
+    active = np.ones((B, n), bool)
+    for b in range(B):
+        r = int(repl[b])
+        kind = pick(["all", "none", "quorum", "sub", "random"])
+        if kind == "none":              # zero active workers
+            active[b] = False
+        elif kind == "quorum":          # exactly r active -> m = 1
+            active[b] = False
+            active[b, rng.choice(n, size=min(r, n), replace=False)] = True
+        elif kind == "sub":             # fewer than r active -> m = 0
+            active[b] = False
+            active[b, rng.choice(n, size=min(r, n) - 1, replace=False)] = True
+        elif kind == "random":
+            active[b] = rng.random(n) < 0.6
+    return keys, active, repl
+
+
+def _prop_sketch(impl, pick):
+    B, d = pick(B_POOL), pick(D_OFFBLOCK)
+    g = jax.random.normal(jax.random.PRNGKey(pick(range(1 << 16))),
+                          (B, d), jnp.float32)
+    key = pick(range(1 << 16))
+    np.testing.assert_allclose(
+        ops.batched_sketch(g, key, impl=impl, interpret=True),
+        ref.batched_sketch_ref(g, key, 256), rtol=2e-5, atol=1e-3)
+
+
+def _prop_relmax(impl, pick):
+    B, R, d = pick(B_POOL), pick(R_POOL), pick(D_OFFBLOCK)
+    reps = jax.random.normal(jax.random.PRNGKey(pick(range(1 << 16))),
+                             (B, R, d), jnp.float32)
+    np.testing.assert_allclose(
+        ops.batched_pairwise_relmax(reps, impl=impl, interpret=True),
+        ref.batched_pairwise_maxdiff_ref(reps), rtol=1e-6, atol=1e-6)
+
+
+def _prop_coded_encode(impl, pick):
+    B, s, m, d = pick(B_POOL), pick((1, 2, 4)), pick((2, 3, 5)), \
+        pick(D_OFFBLOCK)
+    key = jax.random.PRNGKey(pick(range(1 << 16)))
+    C = jax.random.normal(key, (B, s, m), jnp.float32)
+    G = jax.random.normal(jax.random.fold_in(key, 1), (B, m, d), jnp.float32)
+    np.testing.assert_allclose(
+        ops.batched_coded_encode(C, G, impl=impl, interpret=True),
+        ref.batched_coded_encode_ref(C, G), rtol=1e-5, atol=1e-5)
+
+
+def _prop_regroup(pick):
+    keys, active, repl = _layout_arrays(pick)
+    shard, group, m = ops.batched_regroup(
+        jnp.asarray(keys), jnp.asarray(active), jnp.asarray(repl))
+    s_ref, g_ref, m_ref = ref.batched_regroup_ref(keys, active, repl)
+    np.testing.assert_array_equal(np.asarray(shard), s_ref)
+    np.testing.assert_array_equal(np.asarray(group), g_ref)
+    np.testing.assert_array_equal(np.asarray(m), m_ref)
+
+
+def _prop_masked_composites(impl, pick):
+    """vote/detect masked composites == regroup_ref layout + the
+    unmasked op on that layout, and a False gate idles the trial."""
+    from repro.core.detection import detect_groups_batched
+
+    keys, active, repl = _layout_arrays(pick)
+    B, n = active.shape
+    d = pick(D_OFFBLOCK)
+    rng = np.random.default_rng(pick(range(1 << 16)))
+    s_ref, g_ref, m_ref = ref.batched_regroup_ref(keys, active, repl)
+    grads = np.zeros((B, n, d), np.float32)
+    for b in range(B):                  # per-group shared values...
+        vals = rng.normal(size=(n, d)).astype(np.float32)
+        for w in range(n):
+            if g_ref[b, w] >= 0:
+                grads[b, w] = vals[g_ref[b, w]]
+        mem = np.flatnonzero(g_ref[b] >= 0)
+        if mem.size and pick([True, False]):   # ...one corrupted member
+            grads[b, rng.choice(mem)] *= -3.0
+    gate = np.array([pick([True, False]) for _ in range(B)])
+    wc, faulty, shard, group, m = ops.batched_vote_masked(
+        jnp.asarray(grads), jnp.asarray(keys), jnp.asarray(active),
+        jnp.asarray(repl), tau=1e-6, gate=jnp.asarray(gate), impl=impl,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(shard), s_ref)
+    np.testing.assert_array_equal(np.asarray(group), g_ref)
+    np.testing.assert_array_equal(np.asarray(m), m_ref)
+    gv = np.where(gate[:, None], g_ref, -1)
+    wc_u, faulty_u = ops.batched_vote(jnp.asarray(grads), jnp.asarray(gv),
+                                      tau=1e-6, impl=impl, interpret=True)
+    np.testing.assert_array_equal(np.asarray(wc), np.asarray(wc_u))
+    np.testing.assert_array_equal(np.asarray(faulty), np.asarray(faulty_u))
+    assert not np.asarray(wc)[~gate].any()
+
+    symbols = np.asarray(ref.batched_sketch_ref(
+        jnp.asarray(grads.reshape(B * n, d)), 7, 256)).reshape(B, n, -1)
+    fault, mism, shard2, group2, m2 = ops.batched_detect_masked(
+        jnp.asarray(symbols), jnp.asarray(keys), jnp.asarray(active),
+        jnp.asarray(repl), tau=1e-6, gate=jnp.asarray(gate))
+    f_ref, mm_ref = detect_groups_batched(jnp.asarray(symbols),
+                                          jnp.asarray(gv), tau=1e-6)
+    np.testing.assert_array_equal(np.asarray(group2), g_ref)
+    np.testing.assert_array_equal(np.asarray(fault), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(mism), np.asarray(mm_ref))
+    assert not np.asarray(fault)[~gate].any()
+
+
+_PROPS = {
+    "sketch": (_prop_sketch, True),
+    "relmax": (_prop_relmax, True),
+    "coded_encode": (_prop_coded_encode, True),
+    "regroup": (_prop_regroup, False),
+    "masked_composites": (_prop_masked_composites, True),
+}
+
+
+def _run_prop(name, impl, pick):
+    fn, takes_impl = _PROPS[name]
+    fn(impl, pick) if takes_impl else fn(pick)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(data=st.data())
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize("name", sorted(_PROPS))
+    def test_prop_batched_ops(name, impl, data):
+        _run_prop(name, impl,
+                  lambda seq: data.draw(st.sampled_from(list(seq))))
+
+else:
+
+    @pytest.mark.parametrize("case_seed", range(_PROP_CASES))
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize("name", sorted(_PROPS))
+    def test_prop_batched_ops(name, impl, case_seed):
+        tag = hash((name, impl)) & 0xFFFF
+        _run_prop(name, impl, _fallback_pick(case_seed, tag))
