@@ -19,6 +19,11 @@ instead of a serial run_protocol loop per cell:
                          numpy-engine -> jitted-jax-backend column at
                          production gradient dimensions (d sweep up to
                          2^20, 256 trials — target >= 3x at d >= 1M)
+  fused_sweep            the fused data plane's acceptance bar: the
+                         single-pass protocol-step megakernel
+                         (fused=True) vs the three-pass scan body
+                         (fused=False) at production d — >= 1.5x on
+                         TPU / >= 1.2x off-TPU, parity enforced
   schedule_build         control-plane column: vectorized control-only
                          replay vs full-engine proxy replay (>= 3x,
                          arrays identical)
@@ -32,9 +37,12 @@ Environment knobs for the backend sweep: REPRO_BENCH_TRIALS (default
 256), REPRO_BENCH_DEXP (comma-separated log2 dimensions, default
 "16,20"), REPRO_BENCH_STEPS (default 3 — the numpy engine needs
 ~3.5 min per step at d=2^20, B=256; shrink the knobs for quick runs).
+REPRO_PROFILE=<dir> additionally wraps the warm timed runs in
+``jax.profiler.trace(<dir>/<label>)`` for kernel/HBM inspection.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
@@ -46,6 +54,22 @@ from repro.core.engine import ModeSpec, ScenarioMatrix, TrialSpec, run_batch
 from repro.core.simulation import run_protocol
 
 F, N = 2, 8
+
+
+@contextlib.contextmanager
+def _profiled(label: str):
+    """Opt-in profiler hook: REPRO_PROFILE=<dir> wraps the enclosed
+    run_batch calls in a ``jax.profiler.trace`` so fused-vs-unfused HBM
+    traffic (and every kernel launch) is inspectable in TensorBoard /
+    Perfetto; unset, this is a no-op."""
+    prof_dir = os.environ.get("REPRO_PROFILE")
+    if not prof_dir:
+        yield
+        return
+    import jax
+
+    with jax.profiler.trace(os.path.join(prof_dir, label)):
+        yield
 
 
 def _timeit(fn, reps=3):
@@ -241,9 +265,10 @@ def _backend_speedup() -> tuple[list[tuple], list[dict]]:
         t0 = time.perf_counter()
         jx = run_batch(specs, backend="jax")
         t_cold = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        jx = run_batch(specs, backend="jax")
-        t_jax = time.perf_counter() - t0
+        with _profiled(f"jax_d2^{dexp}"):
+            t0 = time.perf_counter()
+            jx = run_batch(specs, backend="jax")
+            t_jax = time.perf_counter() - t0
         t0 = time.perf_counter()
         npb = run_batch(specs)
         t_np = time.perf_counter() - t0
@@ -278,6 +303,73 @@ def _backend_speedup() -> tuple[list[tuple], list[dict]]:
             rows.append(("engine[jax_target_3x_at_1M]", 0.0,
                          str(all(r["speedup"] >= 3.0 for r in big))))
     return rows, detail
+
+
+def fused_sweep() -> list[tuple]:
+    """The fused data plane's acceptance bar: backend="jax" with the
+    fused protocol-step megakernel (fused=True, the default) vs the
+    unfused three-pass scan body (fused=False, the parity oracle) on
+    the production-d drift sweep.  Warm wall-clock, compile reported
+    separately.  Target: >= 1.5x on TPU (three HBM passes -> one), or
+    >= 1.2x with the single jitted XLA fallback off-TPU.  Control
+    quantities must match bit-exactly and values at the documented
+    1e-4 contract; set REPRO_PROFILE=<dir> to capture profiler traces
+    of both variants."""
+    import jax
+
+    B = int(os.environ.get("REPRO_BENCH_TRIALS", "256"))
+    steps = int(os.environ.get("REPRO_BENCH_STEPS", "3"))
+    d_exps = [int(x) for x in
+              os.environ.get("REPRO_BENCH_DEXP", "16,20").split(",")]
+    on_tpu = jax.default_backend() == "tpu"
+    target = 1.5 if on_tpu else 1.2
+    rows, sweep = [], []
+    for dexp in d_exps:
+        d = 1 << dexp
+        specs = [
+            TrialSpec(byz=(2, 5), attack="drift", q=0.2, steps=steps,
+                      seed=s, n_data=64, d=d, label=f"d2^{dexp}/s{s}")
+            for s in range(B)
+        ]
+        timing = {}
+        res = {}
+        for label, kw in (("unfused", {"fused": False}), ("fused", {})):
+            run_batch(specs, backend="jax", **kw)          # compile
+            with _profiled(f"{label}_d2^{dexp}"):
+                t0 = time.perf_counter()
+                res[label] = run_batch(specs, backend="jax", **kw)
+                timing[label] = time.perf_counter() - t0
+        fu, un = res["fused"], res["unfused"]
+        assert fu.fused_used and not un.fused_used
+        ctrl_ok = all(
+            a.identify_step == b.identify_step
+            and a.efficiency == b.efficiency
+            and a.q_trace == b.q_trace
+            for a, b in zip(un, fu)
+        ) and bool(np.array_equal(un.detect_flags, fu.detect_flags))
+        val_ok = all(
+            float(np.abs(b.w - a.w).max())
+            <= 1e-4 * (1.0 + float(np.abs(a.w).max()))
+            for a, b in zip(un, fu)
+        )
+        speedup = timing["unfused"] / timing["fused"]
+        sweep.append({
+            "d": d, "unfused_s": timing["unfused"],
+            "fused_s": timing["fused"], "speedup": speedup,
+            "control_parity": ctrl_ok, "value_parity": val_ok,
+            "target_met": bool(speedup >= target and ctrl_ok and val_ok),
+        })
+        rows.append((f"fused[d=2^{dexp}]", 0.0,
+                     f"{speedup:.2f}x;unfused={timing['unfused']:.1f}s;"
+                     f"fused={timing['fused']:.1f}s"))
+        rows.append((f"fused[parity_d=2^{dexp}]", 0.0,
+                     str(ctrl_ok and val_ok)))
+    detail = {"trials": B, "steps": steps, "backend":
+              jax.default_backend(), "target": target, "sweep": sweep}
+    _dump("fused_sweep", detail)
+    rows.append((f"fused[target_{target}x_met]", 0.0,
+                 str(all(r["target_met"] for r in sweep))))
+    return rows
 
 
 def schedule_build() -> list[tuple]:
@@ -477,5 +569,5 @@ def _dump(name: str, obj) -> None:
 
 
 ALL = [efficiency_vs_q, scheme_comparison, identification_time,
-       adaptive_trace, engine_speedup, schedule_build, engine_devices,
-       adaptive_sweep, fig2_code]
+       adaptive_trace, engine_speedup, fused_sweep, schedule_build,
+       engine_devices, adaptive_sweep, fig2_code]

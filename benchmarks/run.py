@@ -9,9 +9,11 @@ PRs without digging through per-run artifacts.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
+import tempfile
 import traceback
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -82,15 +84,52 @@ def write_bench_engine() -> None:
     devices = _load_bench("engine_devices")
     if devices is not None:
         summary["devices_scaling"] = devices
-    with open(bench_path, "w") as fh:
-        json.dump(summary, fh, indent=1)
-        fh.write("\n")
+    fused = _load_bench("fused_sweep")
+    if fused is not None:
+        rows = fused.get("sweep", [])
+        summary["fused"] = {
+            "trials": fused.get("trials"),
+            "steps": fused.get("steps"),
+            "target": fused.get("target"),
+            "sweep": rows,
+            "target_met": all(r["target_met"] for r in rows) if rows
+            else None,
+        }
+    # atomic replace: an interrupted run (ctrl-C mid-dump, OOM-killed CI
+    # job) must never truncate the merged results file
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(bench_path),
+                               prefix=".BENCH_engine.", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(summary, fh, indent=1)
+            fh.write("\n")
+        os.replace(tmp, bench_path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
-def main() -> None:
+def _suites():
     from benchmarks import bench_kernels, bench_protocol, bench_train
 
-    suites = bench_protocol.ALL + bench_kernels.ALL + bench_train.ALL
+    return bench_protocol.ALL + bench_kernels.ALL + bench_train.ALL
+
+
+def main(argv=None) -> None:
+    suites = _suites()
+    by_name = {fn.__name__: fn for fn in suites}
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--only", metavar="SECTION", default=None,
+        help="run a single bench section by function name; one of: "
+        + ", ".join(sorted(by_name)))
+    args = ap.parse_args(argv)
+    if args.only is not None:
+        if args.only not in by_name:
+            ap.error(f"unknown section {args.only!r}; available: "
+                     + ", ".join(sorted(by_name)))
+        suites = [by_name[args.only]]
     print("name,us_per_call,derived")
     failures = 0
     for fn in suites:

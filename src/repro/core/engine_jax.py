@@ -416,6 +416,126 @@ _device_scan = functools.partial(
 
 
 # ---------------------------------------------------------------------------
+# Fused data plane: the scan body as one megakernel pass per step
+# ---------------------------------------------------------------------------
+#
+# _scan_core pays three full-d HBM passes per step: the residual
+# contraction, the update contraction, and (hoisted, but still a pass per
+# step) the pre-sketch of the data rows.  The fused body rotates the loop
+# by one step so all three collapse into ONE pass (ops.fused_step):
+# iteration t's kernel call applies the PENDING coefficient row cw_{t-1}
+# (W_t = W_{t-1} - cw_{t-1} @ rows), accumulates the new residual
+# symbols W_t @ rows^T, and accumulates the step's CountSketch table —
+# streaming rows/W through VMEM once.  The epilogue (masks, symbols,
+# detection, votes) stays in cheap (B, I)/(B, n, k) space and folds
+# EVERY update contribution — aggregation, both vote rounds, the affine
+# bias terms (the ones-row and noise-row live at rows[I] / rows[I+1]),
+# the learning rate and the live mask — into the next pending row
+# cw_t, so a dead trial's row is exactly zero and its iterate is
+# bitwise unchanged.  One final contraction after the scan materializes
+# W_T.  Scope: the shared-problem, non-filter, host-schedule path (the
+# production-d hot path); everything else falls back to _scan_core,
+# which stays on as the fused path's parity oracle.
+
+
+def _fused_scan_core(rows, y, W0, cw0, stat, xs, com, *, impl: str | None):
+    """Pipelined fused protocol loop.  ``rows`` is the (Ie_pad, d_pad)
+    extended data matrix (A, ones-row, noise-row, zero padding), f32 or
+    bf16; carry = (W, pending coefficient rows)."""
+    from repro.kernels import ops
+
+    n_data = y.shape[0]
+    Ie = rows.shape[0]
+    B = W0.shape[0]
+    lr, alpha, beta, nu = stat["lr"], stat["alpha"], stat["beta"], stat["nu"]
+
+    def agg_coeff(coeff, tam, mask, cr_base):
+        """(B, n) aggregation coefficients -> the update's residual-
+        coefficient row (B, I) plus its two bias coefficients (the
+        ones-row / noise-row columns of the extended contraction)."""
+        aeff = jnp.where(tam, alpha[:, None], 1.0) * coeff
+        row = jnp.einsum("bw,bwi->bi", aeff, mask) * cr_base
+        tw = coeff * tam
+        return row, (tw * beta[:, None]).sum(axis=1), \
+            (tw * nu[:, None]).sum(axis=1)
+
+    def symbols(mask, cr_base, tam, SA, sk_one, sk_noise):
+        C = mask * cr_base[:, None, :]                       # (B, n, I)
+        skw = jnp.einsum("bwi,ik->bwk", C, SA)
+        add = beta[:, None, None] * sk_one[None, None] \
+            + nu[:, None, None] * sk_noise[None, None]
+        return jnp.where(tam[:, :, None],
+                         alpha[:, None, None] * skw + add, skw)
+
+    def step(carry, xc):
+        W, cw = carry
+        x, key_t = xc
+        # ONE HBM pass: apply cw_{t-1}, get resid_t and the sketch table
+        W, resid_e, sk = ops.fused_step(rows, W, cw, key_t, impl=impl)
+        resid = resid_e[:, :n_data] - y[None, :]
+        loss = (resid * resid).mean(axis=1)
+        SA, sk_one, sk_noise = sk[:n_data], sk[n_data], sk[n_data + 1]
+
+        mask1, rows1 = _shard_mask(x["shard1"], x["group1"], x["m1"],
+                                   n_data)
+        cr1 = resid * (2.0 / rows1)[:, None]                 # (B, I)
+
+        row_u, b1, b2 = agg_coeff(x["aggw"], x["tam1"], mask1, cr1)
+
+        skt1 = symbols(mask1, cr1, x["tam1"], SA, sk_one, sk_noise)
+        fault, _ = detect_groups_batched(skt1, x["group1"], tau=TAU_DETECT)
+        det = x["checks"] & fault
+
+        def vote_part(shard, group, m, tam, gate, skt=None, mask=None,
+                      cr=None):
+            def compute(_):
+                if skt is None:
+                    mask_, rows_ = _shard_mask(shard, group, m, n_data)
+                    cr_ = resid * (2.0 / rows_)[:, None]
+                    skt_ = symbols(mask_, cr_, tam, SA, sk_one, sk_noise)
+                else:
+                    mask_, cr_, skt_ = mask, cr, skt
+                gv = jnp.where(gate[:, None], group, -1)
+                wc, _ = ops.batched_vote(skt_, gv, tau=TAU_VOTE, impl=impl)
+                coeff = jnp.where(gate[:, None],
+                                  wc / jnp.maximum(m, 1)[:, None], 0.0)
+                return agg_coeff(coeff, tam, mask_, cr_)
+
+            zeros = (jnp.zeros((B, n_data)), jnp.zeros(B), jnp.zeros(B))
+            return jax.lax.cond(gate.any(), compute, lambda _: zeros, None)
+
+        ru, bu1, bu2 = vote_part(x["shard1"], x["group1"], x["m1"],
+                                 x["tam1"], x["vote1"], skt=skt1,
+                                 mask=mask1, cr=cr1)
+        row_u, b1, b2 = row_u + ru, b1 + bu1, b2 + bu2
+        ru, bu1, bu2 = vote_part(x["shard2"], x["group2"], x["m2"],
+                                 x["tam2"], x["identify"])
+        row_u, b1, b2 = row_u + ru, b1 + bu1, b2 + bu2
+
+        # fold lr and the live mask in: a dead trial's pending row is
+        # exactly zero, so the kernel leaves its iterate bitwise intact
+        scale = jnp.where(x["live"], lr, 0.0)
+        cw = jnp.concatenate(
+            [row_u, b1[:, None], b2[:, None],
+             jnp.zeros((B, Ie - n_data - 2))], axis=1) * scale[:, None]
+        return (W, cw), (loss, det)
+
+    (W, cw), (losses, det) = jax.lax.scan(step, (W0, cw0),
+                                          (xs, com["keys"]))
+    # the last step's update is still pending: one final contraction
+    W = W - jnp.dot(cw, rows.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    return W, losses, det
+
+
+_fused_scan = functools.partial(
+    jax.jit,
+    static_argnames=("impl",),
+    donate_argnames=("W0", "cw0", "stat", "xs"),
+)(_fused_scan_core)
+
+
+# ---------------------------------------------------------------------------
 # On-device control plane: schedule="device"
 # ---------------------------------------------------------------------------
 #
@@ -641,6 +761,35 @@ def _sharded_scan(mesh, shared: bool, has_filter: bool, has_bias: bool,
 
 
 @functools.lru_cache(maxsize=32)
+def _sharded_fused_scan(mesh, impl: str | None, stat_sig: tuple,
+                        xs_sig: tuple, com_sig: tuple):
+    """shard_map-wrapped fused-data-plane scan for a mesh.
+
+    Same collective-free layout as _sharded_scan: the iterate, the
+    pending coefficient rows and every per-trial array shard on the
+    trial axis; the extended data matrix, the target and the per-step
+    sketch keys replicate.  The megakernel runs inside the manual
+    region, so it sees local (B/ndev)-sized shards and needs no GSPMD
+    partitioning rules — exactly like the other batched Pallas ops."""
+    from repro.sharding import shard_map
+
+    in_specs = (
+        _trial_spec(2, None),                              # rows
+        _trial_spec(1, None),                              # y (shared)
+        _trial_spec(2, 0),                                 # W0
+        _trial_spec(2, 0),                                 # cw0
+        {k: _trial_spec(nd, 0) for k, nd in stat_sig},
+        {k: _trial_spec(nd, 1) for k, nd in xs_sig},       # (T, B, ...)
+        {k: _trial_spec(nd, None) for k, nd in com_sig},   # replicated
+    )
+    out_specs = (_trial_spec(2, 0), _trial_spec(2, 1), _trial_spec(2, 1))
+    body = functools.partial(_fused_scan_core, impl=impl)
+    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                   axis_names={"trials"}, check_vma=False)
+    return jax.jit(fn, donate_argnums=(2, 3, 4, 5)), in_specs
+
+
+@functools.lru_cache(maxsize=32)
 def _sharded_device_ctl(mesh, shared: bool, has_bias: bool, impl: str | None,
                         stat_sig: tuple, com_sig: tuple, a_ndim: int):
     """shard_map-wrapped device-control-plane scan for a mesh.
@@ -690,7 +839,8 @@ _PAD_FILL = {"group1": -1, "group2": -1, "fcode": -1, "farr": 1}
 def run_batch_jax(specs, *, schedule: str = "auto",
                   kernel_impl: str | None = None,
                   chunk_trials: int | None = None,
-                  mesh="auto") -> BatchResult:
+                  mesh="auto", fused: bool = True,
+                  stream_dtype: str = "f32") -> BatchResult:
     """Run B protocol trials with the jitted on-device data plane.
 
     schedule: "auto" | "vector" | "proxy" | "oracle" (host control
@@ -703,6 +853,19 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         streams).
     kernel_impl: None (auto: Pallas on TPU, XLA elsewhere) | "pallas" |
         "xla" — forwarded to the batched kernel ops.
+    fused: run the data plane through the fused protocol-step
+        megakernel (``ops.fused_step``: update contraction, residual
+        contraction and the per-step detection pre-sketch in ONE HBM
+        pass — see ``_fused_scan_core``).  Applies to the
+        shared-problem, non-filter, host-schedule path; other batches
+        silently use the unfused scan (the parity oracle, kept at
+        ``fused=False``).  Which path actually ran is reported as
+        ``BatchResult.fused_used``.
+    stream_dtype: "f32" | "bf16" — storage dtype of the streamed data
+        matrix on the fused path (bf16 halves its HBM traffic; all
+        arithmetic and accumulators stay f32, the iterate stays f32).
+        bf16 trades the 1e-4 value-parity contract for bf16-rounded
+        residuals; control quantities are unaffected (host schedule).
     chunk_trials: trials per device pass (default: memory-sized; only
         filter trials materialize a (chunk, n, d) gradient stack).
         Rounded up to a multiple of the mesh size; the last chunk is
@@ -735,6 +898,9 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     # resolve once: the choice becomes a jit-cache key for _device_scan,
     # so a mid-process REPRO_KERNEL_IMPL change must not split the run
     kernel_impl = ops.resolve_impl(kernel_impl)
+    if stream_dtype not in ("f32", "bf16"):
+        raise ValueError(f"unknown stream_dtype {stream_dtype!r}; "
+                         "allowed values: ['f32', 'bf16']")
     _validate(specs)
     B = len(specs)
     device_mode = schedule == "device"
@@ -760,6 +926,7 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         # the documented jax-backend extras attached (empty here)
         out = run_batch(specs)
         out.detect_flags = np.zeros((0, B), bool)
+        out.fused_used = False
         if device_mode:
             trace = dict(q=np.zeros((0, B), np.float32),
                          check=np.zeros((0, B), bool),
@@ -872,21 +1039,45 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         rows_np[p * n_data:(p + 1) * n_data] = problems[key][0]
     rows_np[-2] = 1.0
     rows_np[-1] = noisevec
-    rows_dev = jnp.asarray(rows_np)
     keys_t = np.uint32(0x9E3779B9) * (np.arange(T, dtype=np.uint32) + 1)
-    sk_rows = jnp.stack([
-        ops.batched_sketch(rows_dev, keys_t[t], impl=kernel_impl)
-        for t in range(T)
-    ])                                               # (T, P*I + 2, k)
-    common = {
-        "SA": sk_rows[:, :P * n_data].reshape(T, P, n_data, -1),
-        "sk_one": sk_rows[:, -2],
-        "sk_noise": sk_rows[:, -1],
-    }
-    if device_mode:
-        # the device control plane scans the step index alongside the
-        # pre-sketched rows (its only per-step host input)
-        common["tix"] = jnp.arange(T, dtype=jnp.int32)
+    # fused scope gate: shared-problem, non-filter, host-schedule — the
+    # production-d hot path.  Everything else silently takes _scan_core
+    # (which doubles as the fused path's parity oracle at fused=False).
+    use_fused = bool(fused and not device_mode and shared and not has_filter)
+    d_run = d
+    if use_fused:
+        # the megakernel sketches the rows in-pass, so there is no
+        # hoisted per-step pre-sketch; instead pre-pad the extended
+        # matrix ONCE (block-multiple d, sublane-multiple row count) so
+        # the scan body never pads or slices per step and the kernel's
+        # in-place W aliasing is always eligible.  Zero padding is inert
+        # in all three outputs.
+        from repro.kernels import fused_step as _fs
+
+        Ie = rows_np.shape[0]                      # n_data + 2 (shared)
+        Ie_pad = -(-Ie // 8) * 8
+        d_run = -(-d // _fs.BLOCK_D) * _fs.BLOCK_D
+        rows_f = np.zeros((Ie_pad, d_run), np.float32)
+        rows_f[:Ie, :d] = rows_np
+        rows_dev = jnp.asarray(
+            rows_f,
+            dtype=jnp.bfloat16 if stream_dtype == "bf16" else jnp.float32)
+        common = {"keys": jnp.asarray(keys_t)}
+    else:
+        rows_dev = jnp.asarray(rows_np)
+        sk_rows = jnp.stack([
+            ops.batched_sketch(rows_dev, keys_t[t], impl=kernel_impl)
+            for t in range(T)
+        ])                                           # (T, P*I + 2, k)
+        common = {
+            "SA": sk_rows[:, :P * n_data].reshape(T, P, n_data, -1),
+            "sk_one": sk_rows[:, -2],
+            "sk_noise": sk_rows[:, -1],
+        }
+        if device_mode:
+            # the device control plane scans the step index alongside the
+            # pre-sketched rows (its only per-step host input)
+            common["tix"] = jnp.arange(T, dtype=jnp.int32)
 
     # -- trials mesh: shard the batch dimension across local devices ------
     if isinstance(mesh, str):
@@ -914,7 +1105,9 @@ def run_batch_jax(specs, *, schedule: str = "auto",
 
     # -- scan fn + device placement of the chunk-invariant operands -------
     if mesh is None:
-        if device_mode:
+        if use_fused:
+            scan_fn = functools.partial(_fused_scan, impl=kernel_impl)
+        elif device_mode:
             scan_fn = functools.partial(
                 _device_ctl_scan, shared=shared, has_bias=has_bias,
                 impl=kernel_impl)
@@ -924,15 +1117,20 @@ def run_batch_jax(specs, *, schedule: str = "auto",
                 has_bias=has_bias, impl=kernel_impl)
         # non-shared problems upload per-chunk slices in _stage — a full
         # (B, n_data, d) upfront copy would defeat the chunk memory bound
-        A_dev = jnp.asarray(A_np) if shared else None
+        # (the fused path reads A only through the extended rows matrix)
+        A_dev = jnp.asarray(A_np) if shared and not use_fused else None
         y_dev = jnp.asarray(y_np) if shared else None
         com_dev = common
-        noise_dev = jnp.asarray(noisevec)
+        noise_dev = None if use_fused else jnp.asarray(noisevec)
         in_specs = None
     else:
         stat_sig = tuple((k, v.ndim) for k, v in sorted(stat_np.items()))
         com_sig = tuple((k, int(v.ndim)) for k, v in sorted(common.items()))
-        if device_mode:
+        if use_fused:
+            xs_sig = tuple((k, v.ndim) for k, v in sorted(xs_np.items()))
+            scan_fn, in_specs = _sharded_fused_scan(
+                mesh, kernel_impl, stat_sig, xs_sig, com_sig)
+        elif device_mode:
             scan_fn, in_specs = _sharded_device_ctl(
                 mesh, shared, has_bias, kernel_impl,
                 stat_sig, com_sig, A_np.ndim)
@@ -946,12 +1144,20 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         ns = lambda spec: NamedSharding(mesh, spec)              # noqa: E731
         put = lambda tree, spec: jax.device_put(                 # noqa: E731
             tree, jax.tree.map(ns, spec))
-        # device-mode arg order drops xs: (A, y, W0, stat, com, noise, pid)
-        i_com, i_noise, i_pid = (4, 5, 6) if device_mode else (5, 6, 7)
-        A_dev = put(A_np, in_specs[0]) if shared else None
+        # fused arg order: (rows, y, W0, cw0, stat, xs, com); device-mode
+        # drops xs: (A, y, W0, stat, com, noise, pid)
+        i_com, i_noise, i_pid = \
+            (6, None, None) if use_fused else \
+            (4, 5, 6) if device_mode else (5, 6, 7)
+        if use_fused:
+            rows_dev = put(rows_dev, in_specs[0])   # replicate once
+            A_dev = None
+        else:
+            A_dev = put(A_np, in_specs[0]) if shared else None
         y_dev = put(y_np, in_specs[1]) if shared else None
         com_dev = put(common, in_specs[i_com])
-        noise_dev = put(noisevec, in_specs[i_noise])
+        noise_dev = (None if use_fused else
+                     put(noisevec, in_specs[i_noise]))
 
     def _stage(lo: int):
         """H2D-transfer one chunk's per-trial arrays (async)."""
@@ -963,7 +1169,22 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         xs_c = None if device_mode else {
             k: _pad_rows(v[:, lo:hi], 1, pad, _PAD_FILL.get(k, 0))
             for k, v in xs_np.items()}
-        W0 = np.zeros((bs + pad, d), np.float32)
+        W0 = np.zeros((bs + pad, d_run), np.float32)
+        if use_fused:
+            # pending-coefficient carry starts at zero (no update to
+            # apply on the first kernel call: the pipelined prologue)
+            cw0 = np.zeros((bs + pad, rows_dev.shape[0]), np.float32)
+            if mesh is None:
+                args = (rows_dev, y_dev, jnp.asarray(W0),
+                        jnp.asarray(cw0),
+                        {k: jnp.asarray(v) for k, v in stat_c.items()},
+                        {k: jnp.asarray(v) for k, v in xs_c.items()},
+                        com_dev)
+            else:
+                args = (rows_dev, y_dev, put(W0, in_specs[2]),
+                        put(cw0, in_specs[3]), put(stat_c, in_specs[4]),
+                        put(xs_c, in_specs[5]), com_dev)
+            return slice(lo, hi), bs, args
         pid_c = _pad_rows(pid_np[lo:hi], 0, pad)
         if mesh is None:
             A_c = A_dev if shared else jnp.asarray(A_np[lo:hi])
@@ -1011,7 +1232,7 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             faulty2_tr[:, sl] = np.asarray(fc)[:, :bs]
         else:
             Wc, lc, dc = out
-        W[sl] = np.asarray(Wc, np.float64)[:bs]
+        W[sl] = np.asarray(Wc, np.float64)[:bs, :d]
         losses[:, sl] = np.asarray(lc, np.float64)[:, :bs]
         det[:, sl] = np.asarray(dc)[:, :bs]
 
@@ -1058,4 +1279,5 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     out.detect_flags = det
     out.schedule = sched
     out.device_trace = trace
+    out.fused_used = use_fused
     return out

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.kernels import coded_encode as _enc
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_step as _fs
 from repro.kernels import majority_vote as _mv
 from repro.kernels import ref as _ref
 from repro.kernels import sketch as _sk
@@ -64,19 +65,33 @@ def _shard_batched(kernel, args, arg_specs, out_spec):
                      check_vma=False)(*args)
 
 
+_IMPL_CHOICES = ("pallas", "xla")
+
+
 def resolve_impl(impl: str | None) -> str:
     """Resolve a batched-op impl choice to "pallas" | "xla".
 
     None -> REPRO_KERNEL_IMPL if set, else Pallas on TPU / XLA off-TPU.
+    A typo'd env value raises instead of silently falling through to
+    the default impl (an unset or empty variable means "auto").
     Long-lived callers that bake the choice into a jit cache key (the
     jitted engine) resolve ONCE up front so a later env change can't
     produce a half-and-half run.
     """
-    impl = impl or os.environ.get("REPRO_KERNEL_IMPL") or (
-        "xla" if INTERPRET else "pallas"
-    )
-    if impl not in ("pallas", "xla"):
-        raise ValueError(f"unknown kernel impl {impl!r}")
+    if impl is None:
+        env = os.environ.get("REPRO_KERNEL_IMPL") or None
+        if env is None:
+            return "xla" if INTERPRET else "pallas"
+        if env not in _IMPL_CHOICES:
+            raise ValueError(
+                f"REPRO_KERNEL_IMPL={env!r} is not a known kernel impl; "
+                f"allowed values: {list(_IMPL_CHOICES)} (unset it for "
+                f"the auto choice)")
+        return env
+    if impl not in _IMPL_CHOICES:
+        raise ValueError(
+            f"unknown kernel impl {impl!r}; allowed values: "
+            f"{list(_IMPL_CHOICES)} (or None for the auto choice)")
     return impl
 
 
@@ -273,6 +288,61 @@ def batched_sketch(flat_g, key_scalar, k: int = 256, *,
         return _shard_batched(kern, (flat_g, jnp.asarray(key_scalar)),
                               (True, False), 2)
     return _sketch_xla(flat_g, key_scalar, k)
+
+
+def fused_step(rows, W, cw, key_scalar, *, k: int = 256,
+               impl: str | None = None, interpret: bool | None = None):
+    """One fused protocol-step pass over the data plane.
+
+    (rows (Ie, d) f32/bf16, W (B, d) f32, cw (B, Ie) f32, key) ->
+    (W - cw @ rows, (W - cw @ rows) @ rows^T, CountSketch_k(rows)) —
+    the pending-update contraction, the new residual symbols, and the
+    step's detection-sketch table, all in ONE HBM pass over the
+    gradient state (repro.kernels.fused_step; oracle:
+    ref.fused_step_ref).  ``"pallas"`` is the Mosaic megakernel
+    (interpret mode off-TPU); ``"xla"`` is a single jitted fallback.
+    Under an ambient trials mesh the pallas branch shards W/cw/resid
+    over the leading trial axis (rows and the sketch table replicate —
+    every device computes the identical sk from the same rows).
+    """
+    if _batched_impl(impl) == "pallas":
+        kern = functools.partial(
+            _fs.fused_step, k=k,
+            interpret=INTERPRET if interpret is None else interpret,
+        )
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding import (
+            ambient_mesh, mesh_axis_size_here, shard_map,
+        )
+
+        ntr = mesh_axis_size_here("trials")
+        if ntr > 1 and W.shape[0] % ntr == 0:
+            trial2 = P("trials", None)
+            fn = shard_map(
+                kern, ambient_mesh(),
+                in_specs=(P(None, None), trial2, trial2, P()),
+                out_specs=(trial2, trial2, P(None, None)),
+                axis_names={"trials"}, check_vma=False)
+            return fn(rows, W, cw, jnp.asarray(key_scalar, jnp.uint32))
+        return kern(rows, W, cw, key_scalar)
+    return _fused_step_xla(rows, W, cw, key_scalar, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _fused_step_xla(rows, W, cw, key_scalar, k):
+    rows32 = rows.astype(jnp.float32)
+    W_new = W.astype(jnp.float32) - jnp.dot(
+        cw, rows32, preferred_element_type=jnp.float32)
+    resid = jax.lax.dot_general(W_new, rows32, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    Ie, d = rows32.shape
+    pad = (-d) % k
+    g = jnp.pad(rows32, ((0, 0), (0, pad)))
+    idx = jax.lax.iota(jnp.uint32, d + pad)
+    sk = (g * _ref.hash_signs_ref(idx, key_scalar)[None]).reshape(
+        Ie, -1, k).sum(axis=1)
+    return W_new, resid, sk
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

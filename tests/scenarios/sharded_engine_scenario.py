@@ -76,6 +76,15 @@ def main() -> None:
     same = all(close(a, b) for a, b in zip(un, sh))
     print(f"RESULT sharded_equals_unsharded={same}")
 
+    # -- fused data plane across the mesh: the sharded SCENARIOS runs
+    #    above already take the fused megakernel path (fused=True is the
+    #    default); pin that down and compare against the unfused sharded
+    #    oracle explicitly --------------------------------------------------
+    un_f = run_batch(specs, backend="jax", mesh=mesh, fused=False)
+    same_f = all(close(a, b) for a, b in zip(un_f, sh))
+    flags_ok = sh.fused_used is True and un_f.fused_used is False
+    print(f"RESULT fused_sharded_parity={same_f and flags_ok}")
+
     # -- chunked async pipeline: several chunks + a padded remainder ------
     ch = run_batch(specs, backend="jax", mesh=mesh, chunk_trials=9)
     same_ch = all(close(a, b) for a, b in zip(un, ch))

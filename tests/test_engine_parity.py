@@ -246,6 +246,66 @@ def test_jax_backend_zero_steps_returns_real_problem():
     assert rj.losses == rn.losses == []
 
 
+@pytest.mark.parametrize("name", _scenario_names())
+def test_jax_backend_fused_vs_unfused(name):
+    """fused=True (default) vs fused=False (the parity oracle): control
+    quantities exact, values at the f32-vs-f32 tolerance — across the
+    whole SCENARIOS grid, wherever the fused gate engages."""
+    from repro.core.engine import SCENARIOS
+
+    _, jfu = _both_backends(name)               # default: fused=True
+    jun = SCENARIOS[name].run(backend="jax", fused=False)
+    assert jun.fused_used is False
+    for ru, rf in zip(jun, jfu):
+        assert ru.identify_step == rf.identify_step
+        assert ru.efficiency == rf.efficiency
+        assert ru.q_trace == rf.q_trace
+        np.testing.assert_allclose(rf.w, ru.w, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(rf.losses),
+                                   np.asarray(ru.losses),
+                                   rtol=1e-5, atol=1e-5)
+    assert np.array_equal(jfu.detect_flags, jun.detect_flags)
+
+
+def test_jax_backend_fused_scope_gate():
+    """fused_used reports which path ran: on for the shared-problem
+    host-schedule hot path, silently off for filter trials, mixed
+    problems, schedule="device", and fused=False."""
+    hot = [TrialSpec(byz=(2,), attack="drift", steps=12, q=0.5, seed=1)]
+    assert run_batch(hot, backend="jax").fused_used is True
+    assert run_batch(hot, backend="jax", fused=False).fused_used is False
+    assert run_batch(hot, backend="jax",
+                     schedule="device").fused_used is False
+    filt = [TrialSpec(byz=(2,), attack="drift", steps=12, q=0.5,
+                      mode="filter:median")]
+    assert run_batch(filt, backend="jax").fused_used is False
+    mixed = hot + [TrialSpec(byz=(2,), attack="drift", steps=12, q=0.5,
+                             seed=2, problem_seed=3)]
+    assert run_batch(mixed, backend="jax").fused_used is False
+
+
+def test_jax_backend_bf16_stream():
+    """bf16 data streaming: control plane still exact (it is computed
+    from the host schedule), values at a loosened tolerance."""
+    specs = [
+        TrialSpec(byz=(2, 5), attack="sign_flip", steps=60, q=0.4, seed=1),
+        TrialSpec(byz=(3,), attack="drift", steps=60, q=0.5, seed=2),
+    ]
+    npb = run_batch(specs)
+    jxb = run_batch(specs, backend="jax", stream_dtype="bf16")
+    assert jxb.fused_used is True
+    for rn, rj in zip(npb, jxb):
+        assert rn.identify_step == rj.identify_step
+        assert rn.q_trace == rj.q_trace
+        np.testing.assert_allclose(rj.w, np.asarray(rn.w),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_jax_backend_rejects_bad_stream_dtype():
+    with pytest.raises(ValueError, match=r"f16.*f32.*bf16"):
+        run_batch([TrialSpec(steps=2)], backend="jax", stream_dtype="f16")
+
+
 def test_jax_backend_mixed_batch():
     """Non-shared problems (per-trial A, per-problem sketch tables),
     mixed n/f, and non-uniform step counts through the device path."""

@@ -160,6 +160,110 @@ def test_batched_vote_matches_majority_vote_np(impl):
 
 
 # ---------------------------------------------------------------------------
+# fused protocol-step megakernel vs the composed single-op oracles
+# ---------------------------------------------------------------------------
+
+
+def _fused_inputs(B, Ie, d, seed, rows_dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    rows = jax.random.normal(ks[0], (Ie, d), jnp.float32).astype(rows_dtype)
+    W = jax.random.normal(ks[1], (B, d), jnp.float32)
+    cw = jax.random.normal(ks[2], (B, Ie), jnp.float32)
+    return rows, W, cw
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("B,Ie,d", [
+    (1, 3, 8),            # B = 1 singleton batch, tiny d
+    (2, 10, 511),         # d off the 512 block AND off the 256 sketch lane
+    (3, 7, 513),          # just past one block
+    (2, 8, 1024),         # exact block multiple (in-place aliasing path)
+])
+def test_fused_step_vs_composed_refs(impl, B, Ie, d):
+    rows, W, cw = _fused_inputs(B, Ie, d, seed=B + Ie + d)
+    W_k, resid_k, sk_k = ops.fused_step(rows, W, cw, 1234, impl=impl,
+                                        interpret=True)
+    W_r, resid_r, sk_r = ref.fused_step_ref(rows, W, cw, 1234)
+    np.testing.assert_allclose(W_k, W_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(resid_k, resid_r, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(sk_k, sk_r, rtol=2e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fused_step_zero_coeffs_keep_iterate_bitwise(impl):
+    """A zero coefficient row (dead trial / zero active workers) must
+    leave the iterate BITWISE unchanged — the engine folds the live
+    mask and lr into cw and relies on 0-row contractions being exact."""
+    rows, W, _ = _fused_inputs(3, 6, 1024, seed=11)
+    cw = jnp.zeros((3, 6), jnp.float32)
+    W_k, resid_k, _ = ops.fused_step(rows, W, cw, 7, impl=impl,
+                                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(W_k), np.asarray(W))
+    np.testing.assert_allclose(
+        resid_k, ref.coded_encode_ref(W, jnp.asarray(rows).T),
+        rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("d", [511, 1024])
+def test_fused_step_bf16_stream(impl, d):
+    """bf16-stored rows at loosened tolerance: both the kernel and the
+    oracle read the SAME bf16 values, so the only drift is summation
+    order, but the contractions amplify rounding — hence the loose rtol
+    vs the fp32 run of the same data."""
+    rows, W, cw = _fused_inputs(2, 8, d, seed=d, rows_dtype=jnp.bfloat16)
+    W_k, resid_k, sk_k = ops.fused_step(rows, W, cw, 99, impl=impl,
+                                        interpret=True)
+    W_r, resid_r, sk_r = ref.fused_step_ref(rows, W, cw, 99)
+    np.testing.assert_allclose(W_k, W_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(resid_k, resid_r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(sk_k, sk_r, rtol=1e-4, atol=1e-2)
+    # and the bf16 stream stays close to the f32 stream of the same data
+    rows32, W2, cw2 = _fused_inputs(2, 8, d, seed=d)
+    W_f, _, _ = ops.fused_step(rows32, W2, cw2, 99, impl=impl,
+                               interpret=True)
+    np.testing.assert_allclose(W_k, W_f, rtol=3e-2, atol=3e-1)
+
+
+def test_fused_step_shape_validation():
+    rows, W, cw = _fused_inputs(2, 6, 64, seed=0)
+    from repro.kernels.fused_step import fused_step
+
+    with pytest.raises(ValueError, match="shape mismatch"):
+        fused_step(rows, W[:, :32], cw, 0, interpret=True)
+    with pytest.raises(ValueError, match="multiple"):
+        fused_step(rows, W, cw, 0, k=7, block_d=64, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# impl dispatch: REPRO_KERNEL_IMPL / explicit impl validation
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_impl_rejects_bad_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "cuda")
+    with pytest.raises(ValueError, match=r"cuda.*pallas.*xla"):
+        ops.resolve_impl(None)
+
+
+def test_resolve_impl_rejects_bad_explicit():
+    with pytest.raises(ValueError, match=r"mosaic.*pallas.*xla"):
+        ops.resolve_impl("mosaic")
+
+
+def test_resolve_impl_env_and_auto(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "xla")
+    assert ops.resolve_impl(None) == "xla"
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "")      # empty == unset
+    assert ops.resolve_impl(None) in ("pallas", "xla")
+    monkeypatch.delenv("REPRO_KERNEL_IMPL")
+    assert ops.resolve_impl("pallas") == "pallas"
+    # the explicit argument wins over the env override
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "cuda")
+    assert ops.resolve_impl("xla") == "xla"
+
+
+# ---------------------------------------------------------------------------
 # property-based shape sweeps — hypothesis strategies when installed (the
 # CI adaptive-smoke job), seeded sampling from the SAME pools otherwise,
 # so the adversarial coverage also runs in the bare tier-1 environment.

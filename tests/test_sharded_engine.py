@@ -77,6 +77,13 @@ def test_sharded_equals_unsharded(results):
 
 
 @pytest.mark.slow
+def test_fused_sharded_parity(results):
+    """The fused megakernel path across the 8-device trials mesh agrees
+    with the unfused sharded oracle, and fused_used reports the path."""
+    assert results["fused_sharded_parity"] is True
+
+
+@pytest.mark.slow
 def test_chunk_pipeline_and_padding(results):
     assert results["chunk_pipeline_parity"] is True
     assert results["small_batch_padding_parity"] is True
