@@ -34,6 +34,76 @@ def _load_bench(name: str):
         return json.load(fh)
 
 
+# warm-timing regression gate: a refreshed row whose config matches the
+# committed BENCH_engine.json row must not be more than 10% slower.
+# Override with REPRO_BENCH_ALLOW_REGRESSION=1 (recorded in the summary,
+# so a waved-through regression is still visible in the diff).
+_REGRESSION_TOLERANCE = 1.10
+
+
+def _guard_regressions(prev: dict, summary: dict) -> None:
+    """Compare warm timings of matching-config rows old vs new.
+
+    Only rows whose full config tuple matches are compared (CI's
+    reduced-scale env knobs produce different configs and sail
+    through); carried-over sections compare equal and report ratio 1.
+    Ratios land in ``summary["regression_guard"]``; a ratio above the
+    tolerance raises unless REPRO_BENCH_ALLOW_REGRESSION is set.
+    """
+    checks = []   # (label, old_s, new_s)
+
+    def _rows(d: dict, section: str, key: tuple):
+        """index a section's timing rows by their full config tuple;
+        fused sweep rows inherit (trials, steps) from the section."""
+        sec = d.get(section)
+        if sec is None:
+            return {}
+        if section == "numpy_vs_jax":                  # bare row list
+            rows = sec
+        elif section == "fused":
+            rows = [{**r, "trials": sec.get("trials"),
+                     "steps": sec.get("steps")} for r in sec.get("sweep", [])]
+        else:                                          # single-row dict
+            rows = [sec]
+        return {tuple(r.get(k) for k in key): r for r in rows}
+
+    plans = [
+        ("numpy_vs_jax", ("d", "trials", "steps"), ["jax_warm_s"]),
+        ("adaptive", ("trials", "steps", "d"), ["device_warm_s"]),
+        ("schedule_build", ("trials", "steps"), ["vector_s"]),
+        ("fused", ("d", "trials", "steps"), ["fused_s", "unfused_s"]),
+    ]
+    for section, key, fields in plans:
+        old_rows = _rows(prev, section, key)
+        new_rows = _rows(summary, section, key)
+        for cfg, new_r in new_rows.items():
+            old_r = old_rows.get(cfg)
+            if old_r is None:
+                continue
+            for f in fields:
+                if f in old_r and f in new_r and old_r[f] > 0:
+                    checks.append((f"{section}[{cfg}].{f}",
+                                   old_r[f], new_r[f]))
+
+    ratios = {label: new_s / old_s for label, old_s, new_s in checks}
+    regressed = {label: round(r, 3) for label, r in ratios.items()
+                 if r > _REGRESSION_TOLERANCE}
+    allowed = bool(os.environ.get("REPRO_BENCH_ALLOW_REGRESSION"))
+    summary["regression_guard"] = {
+        "tolerance": _REGRESSION_TOLERANCE,
+        "compared": len(checks),
+        "ratios": {label: round(r, 3) for label, r in ratios.items()},
+        "regressed": regressed,
+        "allowed_by_env": allowed and bool(regressed),
+    }
+    if regressed and not allowed:
+        raise RuntimeError(
+            f"warm-timing regression(s) beyond "
+            f"{(_REGRESSION_TOLERANCE - 1) * 100:.0f}% vs the committed "
+            f"BENCH_engine.json: {regressed} — set "
+            f"REPRO_BENCH_ALLOW_REGRESSION=1 to accept deliberately")
+
+
 def write_bench_engine() -> None:
     """Summarize the engine benchmarks into BENCH_engine.json (repo root).
 
@@ -41,7 +111,8 @@ def write_bench_engine() -> None:
     numpy-engine->jax-backend d sweep (backend_sweep) with parity bits,
     the control-plane schedule-build column (vectorized replay vs the
     full-engine proxy replay), and the multi-device scaling smoke
-    (unsharded vs 8-device-sharded trial batches).
+    (unsharded vs 8-device-sharded trial batches).  Refreshed rows are
+    gated by :func:`_guard_regressions` against the committed file.
     """
     # start from the committed summary so a partial run (e.g. the CI
     # adaptive-smoke job, which produces only the adaptive artifact)
@@ -51,6 +122,7 @@ def write_bench_engine() -> None:
     if os.path.exists(bench_path):
         with open(bench_path) as fh:
             summary = json.load(fh)
+    prev = json.loads(json.dumps(summary))   # deep copy of the baseline
     data = _load_bench("engine_speedup")
     if data is not None:
         sweep = data.get("backend_sweep", [])
@@ -95,6 +167,7 @@ def write_bench_engine() -> None:
             "target_met": all(r["target_met"] for r in rows) if rows
             else None,
         }
+    _guard_regressions(prev, summary)
     # atomic replace: an interrupted run (ctrl-C mid-dump, OOM-killed CI
     # job) must never truncate the merged results file
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(bench_path),

@@ -57,6 +57,13 @@ from typing import Callable
 import numpy as np
 
 from repro.core import adaptive, filters as filters_mod, rngstream
+from repro.core.engineplan.plan import (
+    VALUE_INDEPENDENT_ATTACKS,
+    ExecutionPlan,
+    device_schedulable,
+    spec_display_names,
+    value_independent_control,
+)
 from repro.core.assignment import (
     Assignment,
     BatchedAssignment,
@@ -538,6 +545,11 @@ class BatchResult:
     specs: list[TrialSpec]
     results: list                # list[SimResult]
     elapsed_s: float = 0.0
+    # jax backend only: the resolved ExecutionPlan (path selection +
+    # explain()/fallback_reason) — supersedes the ad-hoc ``fused_used``
+    # attribute, which the backend still mirrors for compatibility.
+    # The numpy engine leaves it None.
+    plan: "ExecutionPlan | None" = None
 
     def __iter__(self):
         return iter(self.results)
@@ -1074,63 +1086,11 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
 # Vectorized control-plane replay
 # ---------------------------------------------------------------------------
 
-# attacks whose detectability never depends on gradient magnitudes: they
-# perturb by a fixed nonzero offset ("drift", "noise") or never perturb
-# ("none"), so WHO gets caught is a pure function of the tamper/assignment
-# coin flips.  "sign_flip"/"scale"/"zero" scale the gradient itself and
-# become undetectable exactly at the convergence floor.
-VALUE_INDEPENDENT_ATTACKS = frozenset({"none", "drift", "noise"})
-
-
-def value_independent_control(spec: TrialSpec) -> bool:
-    """True when the trial's control flow (check decisions, detection
-    outcomes, identified sets) does not depend on gradient values, i.e.
-    the schedule can be replayed without running the data plane at all.
-    The jax backend's ``proxy_schedulable`` is the same predicate."""
-    if spec.q is None and spec.mode == "randomized":
-        return False          # adaptive q*_t depends on the observed loss
-    if not spec.byz:
-        return True           # nothing ever tampers -> nothing to detect
-    if spec.mode in ("none",) or spec.mode.startswith("filter"):
-        return True           # no detection phase at all
-    return isinstance(spec.attack, str) \
-        and spec.attack in VALUE_INDEPENDENT_ATTACKS
-
-
-def spec_display_names(specs: list[TrialSpec], flags) -> list[str]:
-    """Human-readable names for the specs where ``flags`` is truthy —
-    the label when one was given, otherwise a descriptive
-    ``spec[i](mode/attack...)`` so error messages never degenerate to
-    bare indices."""
-    out = []
-    for i, (s, bad) in enumerate(zip(specs, flags)):
-        if not bad:
-            continue
-        if s.label:
-            out.append(s.label)
-        else:
-            q = "adaptive" if s.q is None else f"q={s.q}"
-            out.append(f"spec[{i}]({s.mode}/{s.attack}/{q})")
-    return out
-
-
-def device_schedulable(spec: TrialSpec) -> bool:
-    """True when the trial's control plane can run INSIDE the jitted
-    device scan (engine_jax ``schedule="device"``) under the
-    ``rng="device"`` stream contract: affine attacks, plain
-    none/deterministic/randomized modes (adaptive q* included — that's
-    the point), no selective checks, no crash/recover events, no
-    filters, no draco.  Value-DEPENDENT classes are fine; what's
-    excluded is control flow the scan cannot express (per-worker
-    selective coins, membership churn injected from outside)."""
-    if not isinstance(spec.attack, str):
-        return False
-    from repro.core.engine_jax import AFFINE_ATTACKS
-
-    return (spec.attack in AFFINE_ATTACKS
-            and spec.mode in ("none", "deterministic", "randomized")
-            and not spec.selective
-            and not spec.events)
+# The schedulability predicates (VALUE_INDEPENDENT_ATTACKS,
+# value_independent_control, device_schedulable, spec_display_names)
+# canonically live in repro.core.engineplan.plan — the pure plan layer
+# below both engines — and are re-exported from this module's import
+# block for the public API.
 
 
 def replay_control_fast(specs: list[TrialSpec],

@@ -13,35 +13,34 @@ protocol into
    only on WHO tampered, not on gradient magnitudes, for
    always-detectable attacks), so the schedule comes from the
    vectorized control-only replay (engine.replay_control_fast, mode
-   "vector"): the numpy engine's exact RNG streams and state machine
-   with the data plane deleted — O(B·T·n), no matmuls.  The tiny-proxy
-   full-engine replay is kept as mode "proxy" (the parity oracle for
-   "vector").  Value-dependent classes (adaptive q*, attacks whose
-   detectability vanishes at the convergence floor) replay on the real
-   problem instead ("oracle" schedule) — exact, but the replay then
-   costs one numpy-engine pass;
+   "vector").  Value-dependent classes replay on the real problem
+   instead ("oracle" schedule), or fuse the control plane into the scan
+   itself (``schedule="device"``);
 
- * a **data plane** on device: a single jitted function scans the
-   schedule over iterations, recomputing every float quantity —
-   residuals, losses, shard gradients, Byzantine attacks, detection
-   symbols, majority-vote winners, aggregation, the parameter update —
+ * a **data plane** on device: one parameterized scan step
+   (repro.core.engineplan.stepcore) recomputing every float quantity
    with NO host synchronization inside the scan.  Honest replicas are
    copies and every attack is affine, so the whole "shard gradients →
    tamper → aggregate/vote" pipeline folds algebraically into per-row
-   residual coefficients: an iteration pays exactly two d-sized
-   contractions, and nothing of shape (B, n, d) is ever materialized
-   (filter baselines excepted).  Detection and vote agreement run on
-   k-dim CountSketch symbols derived from pre-sketched data rows by the
-   same linearity.  The batched Pallas kernels (repro.kernels.ops
-   ``batched_*``: Mosaic on TPU, ref-equivalent XLA elsewhere) do the
-   sketching, the symbol-domain vote agreement, and the per-trial
-   encodes.  The trial batch shards over a 1-D ``("trials",)`` device
-   mesh (repro.sharding.trials_mesh; ``mesh="auto"`` uses every local
-   device) via shard_map — trials are embarrassingly parallel, so the
-   scan body needs no collectives and the kernels see local shards —
-   and chunks stream through an async donated-buffer pipeline (H2D of
-   chunk k+1 overlapped with compute of chunk k, one host sync at the
-   end).  See docs/performance.md § Multi-device scaling.
+   residual coefficients; detection and vote agreement run on k-dim
+   CountSketch symbols.  The trial batch shards over a 1-D
+   ``("trials",)`` device mesh via shard_map and chunks stream through
+   an async donated-buffer pipeline.
+
+This module is the thin compose-and-dispatch **facade** over the
+layered ``repro.core.engineplan`` package (see docs/architecture.md):
+
+    plan      resolve_plan(specs, ...) -> ExecutionPlan  (pure)
+    stepcore  step_core(...)       one parameterized lax.scan step
+    shard     shard_wrap(plan, mesh, ...)   one shard_map builder
+    pipeline  run_chunks(...)      chunked async H2D pipeline
+
+``run_batch_jax`` resolves the plan once, prepares host arrays, picks
+the jitted/sharded step core, streams the chunks, and assembles the
+``BatchResult`` — whose ``plan`` attribute reports (and ``explain()``s)
+every path decision, including why a requested fused run demoted
+(``FusedFallbackWarning`` is emitted instead of the old silent
+fallback).
 
 Parity contract (tests/test_engine_parity.py, docs/performance.md):
 control quantities — efficiency counters, check/identify schedules,
@@ -66,66 +65,41 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import adaptive, rngstream
-from repro.core.detection import detect_groups_batched
+from repro.core import rngstream
 from repro.core.engine import (
     BatchResult,
     ScheduleRecorder,
     TrialSpec,
-    device_schedulable,
+    replay_control_fast,
     replay_control_from_trace,
     run_batch,
-    spec_display_names,
+)
+from repro.core.engineplan import plan as planlib
+from repro.core.engineplan.pipeline import run_chunks
+from repro.core.engineplan.plan import (
+    AFFINE_ATTACKS,            # noqa: F401  (public: tests import it here)
+    ExecutionPlan,             # noqa: F401  (public re-export)
+    FusedFallbackWarning,      # noqa: F401  (public re-export)
+    device_schedulable,        # noqa: F401  (public re-export)
+    resolve_plan,
+    value_independent_control,
+)
+from repro.core.engineplan.shard import shard_wrap
+from repro.core.engineplan.stepcore import (
+    TAU_DETECT,                # noqa: F401  (public re-export)
+    TAU_VOTE,                  # noqa: F401  (public re-export)
+    jitted_step_core,
 )
 from repro.core.simulation import make_problem
 
-# affine attack table: g' = alpha * g + beta * 1 + nu * noisevec, where
-# noisevec is ATTACKS["noise"]'s fixed default_rng(0) draw.  Mirrors
-# repro.core.simulation.ATTACKS exactly.
-AFFINE_ATTACKS: dict[str, tuple[float, float, float]] = {
-    "none": (1.0, 0.0, 0.0),
-    "sign_flip": (-5.0, 0.0, 0.0),
-    "scale": (10.0, 0.0, 0.0),
-    "drift": (1.0, 1.0, 0.0),
-    "zero": (0.0, 0.0, 0.0),
-    "noise": (1.0, 0.0, 1.0),
-}
-
-# attacks whose detectability never depends on the gradient's magnitude:
-# "drift"/"noise" perturb by a fixed nonzero vector (always caught by the
-# 1e-9 replica compare), "none" never perturbs.  "sign_flip"/"scale"/
-# "zero" scale the gradient itself — undetectable exactly at the
-# convergence floor — so their detection trace is value-dependent.
-# (Canonical definition lives in engine.VALUE_INDEPENDENT_ATTACKS.)
-from repro.core.engine import (  # noqa: E402  (grouped with engine imports)
-    VALUE_INDEPENDENT_ATTACKS as _VALUE_INDEPENDENT_ATTACKS,
-    replay_control_fast,
-    value_independent_control,
-)
-
-_FILTER_CODES = {"mean": 0, "median": 1, "krum": 2}
+_FILTER_CODES = planlib.FILTER_CODES
 
 _PROXY_N_DATA = 64
 _PROXY_D = 4
 
-TAU_VOTE = 1e-9       # matches majority_vote_np(tau=1e-9) in both engines
-TAU_DETECT = 1e-9     # matches the engine's absolute replica compare
-
-# element budget for sizing trials-per-device-chunk: the scan's largest
-# live array is ~4 (B, d) buffers (W + update terms), or the (B, n, d)
-# gradient stack when filter trials force it — either way the chunk is
-# chosen to keep ~1 GiB of f32 in flight
-_CHUNK_ELEMS = 1 << 27
-
-
-def _filter_name(spec: TrialSpec) -> str | None:
-    if not spec.mode.startswith("filter"):
-        return None
-    return spec.mode.split(":", 1)[1] if ":" in spec.mode else spec.filter_name
-
-
-def _is_adaptive(spec: TrialSpec) -> bool:
-    return spec.q is None and spec.mode == "randomized"
+_filter_name = planlib.filter_name
+_is_adaptive = planlib.is_adaptive
+_validate = planlib.validate_specs
 
 
 def proxy_schedulable(spec: TrialSpec) -> bool:
@@ -133,26 +107,6 @@ def proxy_schedulable(spec: TrialSpec) -> bool:
     schedule replay may run on a tiny proxy problem — or skip the data
     plane entirely (engine.replay_control_fast) — at O(1) cost in d."""
     return value_independent_control(spec)
-
-
-def _validate(specs: list[TrialSpec]) -> None:
-    dims = {(s.n_data, s.d) for s in specs}
-    if len(dims) > 1:
-        # same contract as the numpy backend (engine.run_batch): a batch
-        # must share problem dimensions — catching it here replaces an
-        # opaque broadcast error in the (B, n_data, d) copy loop below
-        raise ValueError(
-            f"trials must share (n_data, d), got {sorted(dims)}")
-    for s in specs:
-        if not isinstance(s.attack, str) or s.attack not in AFFINE_ATTACKS:
-            raise NotImplementedError(
-                f"jax backend supports the affine attack table "
-                f"{sorted(AFFINE_ATTACKS)}, got {s.attack!r}")
-        name = _filter_name(s)
-        if name is not None and name not in _FILTER_CODES:
-            raise NotImplementedError(
-                f"jax backend supports filters {sorted(_FILTER_CODES)}, "
-                f"got {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -184,21 +138,12 @@ def build_schedule(specs: list[TrialSpec], mode: str = "auto") -> Schedule:
     handled by ``run_batch_jax`` itself (the decisions come back from
     the on-device control plane and this host machinery replays *from
     that trace* — see ``engine.replay_control_from_trace``).
+
+    Mode resolution and eligibility errors route through the plan
+    layer (``engineplan.resolve_schedule_mode``), so unschedulable
+    specs are named alongside the nearest plan that would accept them.
     """
-    eligible = all(proxy_schedulable(s) for s in specs)
-    if mode == "auto":
-        mode = "vector" if eligible else "oracle"
-    if mode in ("proxy", "vector") and not eligible:
-        flags = [not proxy_schedulable(s) for s in specs]
-        raise ValueError(
-            f"{mode} schedule invalid for value-dependent trials: "
-            f"{spec_display_names(specs, flags)} — use schedule=\"device\" "
-            f"(on-device control plane) or \"oracle\" for these")
-    if mode not in ("proxy", "oracle", "vector"):
-        raise ValueError(
-            f"unknown schedule mode {mode!r} (build_schedule handles "
-            f"host modes auto/vector/proxy/oracle; \"device\" lives in "
-            f"run_batch_jax)")
+    mode = planlib.resolve_schedule_mode(specs, mode, host_only=True)
 
     rec = ScheduleRecorder()
     if mode == "vector":
@@ -217,629 +162,14 @@ def build_schedule(specs: list[TrialSpec], mode: str = "auto") -> Schedule:
 
 
 # ---------------------------------------------------------------------------
-# Data plane: the jitted scan
-# ---------------------------------------------------------------------------
-
-
-def _shard_mask(shard, group, m, n_data):
-    """(B, n) shard layout -> (B, n, I) f32 row-ownership mask.
-
-    Row i belongs to worker w iff i // rows == shard[w] (contiguous
-    shards of rows = I // m rows each; remainder rows dropped), and w is
-    a group member.  This is ``shard_batch_indices`` as a dense mask.
-    """
-    rows = n_data // jnp.maximum(m, 1)                         # (B,)
-    i = jnp.arange(n_data, dtype=jnp.int32)
-    owner = i[None, :] // jnp.maximum(rows, 1)[:, None]        # (B, I)
-    used = i[None, :] < (m * rows)[:, None]
-    mask = (owner[:, None, :] == shard[:, :, None]) \
-        & used[:, None, :] & (group >= 0)[:, :, None]
-    return mask.astype(jnp.float32), rows
-
-
-def _apply_affine(g, tam, alpha, beta, nu, noisevec, has_bias: bool):
-    """Masked affine Byzantine attacks on a (B, n, d) gradient stack."""
-    tam3 = tam[:, :, None]
-    out = jnp.where(tam3, alpha[:, None, None] * g, g)
-    if has_bias:
-        add = beta[:, None, None] + nu[:, None, None] * noisevec[None, None]
-        out = out + jnp.where(tam3, add, 0.0)
-    return out
-
-
-def _masked_median(g, act):
-    """Coordinate-wise median over each trial's active workers."""
-    B = g.shape[0]
-    x = jnp.where(act[:, :, None], g, jnp.inf)
-    x = jnp.sort(x, axis=1)
-    cnt = act.sum(axis=1)
-    lo = jnp.maximum((cnt - 1) // 2, 0)
-    hi = jnp.maximum(cnt // 2, 0)
-    rows = jnp.arange(B)
-    return 0.5 * (x[rows, lo] + x[rows, hi])
-
-
-def _masked_krum(g, act, f):
-    """KRUM (m=1) over each trial's active workers, inactive rows masked
-    out of distances, scores and the argmin — same winner as
-    ``filters.krum`` on the active subset (ascending worker order)."""
-    B, n, d = g.shape
-    diff = g[:, :, None, :] - g[:, None, :, :]
-    d2 = (diff * diff).sum(-1)                                  # (B, n, n)
-    pair_ok = act[:, :, None] & act[:, None, :]
-    d2 = jnp.where(pair_ok, d2, 1e30) + jnp.eye(n) * 1e30
-    cnt = act.sum(axis=1)                                       # (B,)
-    kth = jnp.clip(cnt - f - 2, 1, n)                           # (B,)
-    s = jnp.sort(d2, axis=2)
-    csum = jnp.cumsum(s, axis=2)
-    rows = jnp.arange(B)
-    scores = csum[rows[:, None], jnp.arange(n)[None, :],
-                  jnp.minimum(kth - 1, n - 1)[:, None]]         # (B, n)
-    scores = jnp.where(act, scores, jnp.inf)
-    best = jnp.argmin(scores, axis=1)
-    return g[rows, best]
-
-
-def _masked_mean(g, act):
-    cnt = jnp.maximum(act.sum(axis=1), 1)
-    return (g * act[:, :, None]).sum(axis=1) / cnt[:, None]
-
-
-def _scan_core(A, y, W0, stat, xs, com, noisevec, pid, *, shared: bool,
-               has_filter: bool, has_bias: bool, impl: str | None):
-    """The fused protocol loop: scan the schedule over iterations.
-
-    Every iteration pays only two d-sized contractions (residual and
-    update).  Honest replicas are copies and attacks are affine, so the
-    whole "shard grads → tamper → aggregate/vote" pipeline folds into
-    per-row residual coefficients; detection symbols and vote agreement
-    run in the k-dim sketch domain, built from pre-sketched data rows
-    (``SA``) by the same linearity.  A replica group's symbols are
-    bitwise equal exactly when its full gradients are (identical
-    coefficient rows → identical contractions), so symbol-domain
-    winners match the numpy engine's full-vector vote outside the
-    detectability floor — where all candidates agree within tau and any
-    winner's value is within tolerance anyway.  Nothing of shape
-    (B, n, d) is ever materialized, except for the genuinely nonlinear
-    gradient-filter baselines (compiled only when present)."""
-    from repro.kernels import ops
-
-    n_data = A.shape[-2]
-    lr, alpha, beta, nu = stat["lr"], stat["alpha"], stat["beta"], stat["nu"]
-    fcode, farr = stat["fcode"], stat["farr"]
-
-    def contract(cr):                  # (B, I) row weights -> (B, d)
-        if shared:
-            return jnp.einsum("bi,id->bd", cr, A)
-        return ops.batched_coded_encode(cr[:, None, :], A, impl=impl)[:, 0]
-
-    def agg_value(coeff, tam, mask, cr_base):
-        """(B, n) aggregation coefficients -> (B, d) update value, with
-        the affine attacks folded in: sum_w coeff_w * attack_w(g_w)."""
-        aeff = jnp.where(tam, alpha[:, None], 1.0) * coeff
-        upd = contract(jnp.einsum("bw,bwi->bi", aeff, mask) * cr_base)
-        if has_bias:
-            tw = coeff * tam
-            upd = upd + (tw * beta[:, None]).sum(axis=1)[:, None] \
-                + (tw * nu[:, None]).sum(axis=1)[:, None] * noisevec[None]
-        return upd
-
-    def symbols(mask, cr_base, tam, SA_t, sk_one, sk_noise):
-        """Per-worker detection symbols: sketch linearity turns the
-        worker's gradient sketch into its coefficient row times the
-        pre-sketched data rows; attacks act affinely on symbols too."""
-        C = mask * cr_base[:, None, :]                       # (B, n, I)
-        skw = jnp.einsum("bwi,bik->bwk", C, SA_t[pid])
-        if has_bias:
-            add = beta[:, None, None] * sk_one[None, None] \
-                + nu[:, None, None] * sk_noise[None, None]
-        else:
-            add = 0.0
-        return jnp.where(tam[:, :, None],
-                         alpha[:, None, None] * skw + add, skw)
-
-    def step(W, xc):
-        x, c = xc
-        if shared:
-            resid = jnp.einsum("id,bd->bi", A, W) - y[None, :]
-        else:
-            resid = jnp.einsum("bid,bd->bi", A, W) - y
-        loss = (resid * resid).mean(axis=1)
-
-        mask1, rows1 = _shard_mask(x["shard1"], x["group1"], x["m1"],
-                                   n_data)
-        cr1 = resid * (2.0 / rows1)[:, None]                 # (B, I)
-
-        # -- weighted aggregation (fast + clean-check trials) ----------
-        upd = agg_value(x["aggw"], x["tam1"], mask1, cr1)
-
-        # -- detection symbols + on-device check verdicts --------------
-        skt1 = symbols(mask1, cr1, x["tam1"], c["SA"], c["sk_one"],
-                       c["sk_noise"])
-        fault, _ = detect_groups_batched(skt1, x["group1"], tau=TAU_DETECT)
-        det = x["checks"] & fault
-
-        # -- majority votes (draco every step; identify rounds rare) ---
-        def vote_part(shard, group, m, tam, gate, skt=None, mask=None,
-                      cr=None):
-            def compute(_):
-                if skt is None:
-                    mask_, rows_ = _shard_mask(shard, group, m, n_data)
-                    cr_ = resid * (2.0 / rows_)[:, None]
-                    skt_ = symbols(mask_, cr_, tam, c["SA"], c["sk_one"],
-                                   c["sk_noise"])
-                else:
-                    mask_, cr_, skt_ = mask, cr, skt
-                gv = jnp.where(gate[:, None], group, -1)
-                wc, _ = ops.batched_vote(skt_, gv, tau=TAU_VOTE, impl=impl)
-                coeff = jnp.where(gate[:, None],
-                                  wc / jnp.maximum(m, 1)[:, None], 0.0)
-                return agg_value(coeff, tam, mask_, cr_)
-
-            return jax.lax.cond(gate.any(), compute,
-                                lambda _: jnp.zeros_like(W0), None)
-
-        upd = upd + vote_part(x["shard1"], x["group1"], x["m1"], x["tam1"],
-                              x["vote1"], skt=skt1, mask=mask1, cr=cr1)
-        upd = upd + vote_part(x["shard2"], x["group2"], x["m2"], x["tam2"],
-                              x["identify"])
-
-        # -- gradient-filter baselines (genuinely need the stack) ------
-        if has_filter:
-            C = mask1 * cr1[:, None, :]
-            if shared:
-                g1 = jnp.einsum("bwi,id->bwd", C, A)
-            else:
-                g1 = jnp.einsum("bwi,bid->bwd", C, A)
-            gt1 = _apply_affine(g1, x["tam1"], alpha, beta, nu, noisevec,
-                                has_bias)
-            act = x["active"] & x["live"][:, None]
-            fupd = jnp.where((fcode == 1)[:, None],
-                             _masked_median(gt1, act),
-                             _masked_mean(gt1, act))
-            fupd = jnp.where((fcode == 2)[:, None],
-                             _masked_krum(gt1, act, farr), fupd)
-            upd = jnp.where((fcode >= 0)[:, None], fupd, upd)
-
-        W = jnp.where(x["live"][:, None], W - lr[:, None] * upd, W)
-        return W, (loss, det)
-
-    W, (losses, det) = jax.lax.scan(step, W0, (xs, com))
-    return W, losses, det
-
-
-_device_scan = functools.partial(
-    jax.jit,
-    static_argnames=("shared", "has_filter", "has_bias", "impl"),
-    donate_argnames=("W0", "stat", "xs"),
-)(_scan_core)
-
-
-# ---------------------------------------------------------------------------
-# Fused data plane: the scan body as one megakernel pass per step
-# ---------------------------------------------------------------------------
-#
-# _scan_core pays three full-d HBM passes per step: the residual
-# contraction, the update contraction, and (hoisted, but still a pass per
-# step) the pre-sketch of the data rows.  The fused body rotates the loop
-# by one step so all three collapse into ONE pass (ops.fused_step):
-# iteration t's kernel call applies the PENDING coefficient row cw_{t-1}
-# (W_t = W_{t-1} - cw_{t-1} @ rows), accumulates the new residual
-# symbols W_t @ rows^T, and accumulates the step's CountSketch table —
-# streaming rows/W through VMEM once.  The epilogue (masks, symbols,
-# detection, votes) stays in cheap (B, I)/(B, n, k) space and folds
-# EVERY update contribution — aggregation, both vote rounds, the affine
-# bias terms (the ones-row and noise-row live at rows[I] / rows[I+1]),
-# the learning rate and the live mask — into the next pending row
-# cw_t, so a dead trial's row is exactly zero and its iterate is
-# bitwise unchanged.  One final contraction after the scan materializes
-# W_T.  Scope: the shared-problem, non-filter, host-schedule path (the
-# production-d hot path); everything else falls back to _scan_core,
-# which stays on as the fused path's parity oracle.
-
-
-def _fused_scan_core(rows, y, W0, cw0, stat, xs, com, *, impl: str | None):
-    """Pipelined fused protocol loop.  ``rows`` is the (Ie_pad, d_pad)
-    extended data matrix (A, ones-row, noise-row, zero padding), f32 or
-    bf16; carry = (W, pending coefficient rows)."""
-    from repro.kernels import ops
-
-    n_data = y.shape[0]
-    Ie = rows.shape[0]
-    B = W0.shape[0]
-    lr, alpha, beta, nu = stat["lr"], stat["alpha"], stat["beta"], stat["nu"]
-
-    def agg_coeff(coeff, tam, mask, cr_base):
-        """(B, n) aggregation coefficients -> the update's residual-
-        coefficient row (B, I) plus its two bias coefficients (the
-        ones-row / noise-row columns of the extended contraction)."""
-        aeff = jnp.where(tam, alpha[:, None], 1.0) * coeff
-        row = jnp.einsum("bw,bwi->bi", aeff, mask) * cr_base
-        tw = coeff * tam
-        return row, (tw * beta[:, None]).sum(axis=1), \
-            (tw * nu[:, None]).sum(axis=1)
-
-    def symbols(mask, cr_base, tam, SA, sk_one, sk_noise):
-        C = mask * cr_base[:, None, :]                       # (B, n, I)
-        skw = jnp.einsum("bwi,ik->bwk", C, SA)
-        add = beta[:, None, None] * sk_one[None, None] \
-            + nu[:, None, None] * sk_noise[None, None]
-        return jnp.where(tam[:, :, None],
-                         alpha[:, None, None] * skw + add, skw)
-
-    def step(carry, xc):
-        W, cw = carry
-        x, key_t = xc
-        # ONE HBM pass: apply cw_{t-1}, get resid_t and the sketch table
-        W, resid_e, sk = ops.fused_step(rows, W, cw, key_t, impl=impl)
-        resid = resid_e[:, :n_data] - y[None, :]
-        loss = (resid * resid).mean(axis=1)
-        SA, sk_one, sk_noise = sk[:n_data], sk[n_data], sk[n_data + 1]
-
-        mask1, rows1 = _shard_mask(x["shard1"], x["group1"], x["m1"],
-                                   n_data)
-        cr1 = resid * (2.0 / rows1)[:, None]                 # (B, I)
-
-        row_u, b1, b2 = agg_coeff(x["aggw"], x["tam1"], mask1, cr1)
-
-        skt1 = symbols(mask1, cr1, x["tam1"], SA, sk_one, sk_noise)
-        fault, _ = detect_groups_batched(skt1, x["group1"], tau=TAU_DETECT)
-        det = x["checks"] & fault
-
-        def vote_part(shard, group, m, tam, gate, skt=None, mask=None,
-                      cr=None):
-            def compute(_):
-                if skt is None:
-                    mask_, rows_ = _shard_mask(shard, group, m, n_data)
-                    cr_ = resid * (2.0 / rows_)[:, None]
-                    skt_ = symbols(mask_, cr_, tam, SA, sk_one, sk_noise)
-                else:
-                    mask_, cr_, skt_ = mask, cr, skt
-                gv = jnp.where(gate[:, None], group, -1)
-                wc, _ = ops.batched_vote(skt_, gv, tau=TAU_VOTE, impl=impl)
-                coeff = jnp.where(gate[:, None],
-                                  wc / jnp.maximum(m, 1)[:, None], 0.0)
-                return agg_coeff(coeff, tam, mask_, cr_)
-
-            zeros = (jnp.zeros((B, n_data)), jnp.zeros(B), jnp.zeros(B))
-            return jax.lax.cond(gate.any(), compute, lambda _: zeros, None)
-
-        ru, bu1, bu2 = vote_part(x["shard1"], x["group1"], x["m1"],
-                                 x["tam1"], x["vote1"], skt=skt1,
-                                 mask=mask1, cr=cr1)
-        row_u, b1, b2 = row_u + ru, b1 + bu1, b2 + bu2
-        ru, bu1, bu2 = vote_part(x["shard2"], x["group2"], x["m2"],
-                                 x["tam2"], x["identify"])
-        row_u, b1, b2 = row_u + ru, b1 + bu1, b2 + bu2
-
-        # fold lr and the live mask in: a dead trial's pending row is
-        # exactly zero, so the kernel leaves its iterate bitwise intact
-        scale = jnp.where(x["live"], lr, 0.0)
-        cw = jnp.concatenate(
-            [row_u, b1[:, None], b2[:, None],
-             jnp.zeros((B, Ie - n_data - 2))], axis=1) * scale[:, None]
-        return (W, cw), (loss, det)
-
-    (W, cw), (losses, det) = jax.lax.scan(step, (W0, cw0),
-                                          (xs, com["keys"]))
-    # the last step's update is still pending: one final contraction
-    W = W - jnp.dot(cw, rows.astype(jnp.float32),
-                    preferred_element_type=jnp.float32)
-    return W, losses, det
-
-
-_fused_scan = functools.partial(
-    jax.jit,
-    static_argnames=("impl",),
-    donate_argnames=("W0", "cw0", "stat", "xs"),
-)(_fused_scan_core)
-
-
-# ---------------------------------------------------------------------------
-# On-device control plane: schedule="device"
-# ---------------------------------------------------------------------------
-#
-# The host-schedule modes above precompute every decision on the host and
-# scan a dense (T, B, ...) schedule.  For value-dependent classes that
-# precompute is a full numpy-engine pass ("oracle") — the very thing the
-# backend exists to avoid.  The device control plane folds the decisions
-# into the scan instead: losses, λ_t = 1 − e^{−ℓ_t}, the closed-form
-# q*_t (repro.core.adaptive.q_star_arr), the check/tamper coins and
-# replica-group permutations (repro.core.rngstream threefry streams,
-# bit-identical to the numpy engine's rng="device" contract), sketch-
-# domain detection verdicts, and the reactive regroup/vote/elimination
-# transitions — all inside the jitted lax.scan, with the (W, active,
-# kappa) protocol state as the scan carry.  The host sees only the
-# per-step decision trace (q_t, check, detect, faulty2) afterwards and
-# reconstructs meters/assignments/schedule from it EXACTLY via
-# engine.replay_control_from_trace; the numpy engine run with
-# rng="device" is the differential-parity oracle
-# (tests/test_engine_differential.py).
-
-_PH1 = np.uint32(1 << 16)     # phase-1 counter bit (identify pass)
-
-
-def _device_ctl_core(A, y, W0, stat, com, noisevec, pid, *, shared: bool,
-                     has_bias: bool, impl: str | None):
-    """Protocol loop with the control plane fused into the scan.
-
-    ``stat`` carries per-trial statics: problem/attack scalars, the
-    threefry key words of the three decision streams, the Byzantine
-    mask and the initial active mask.  ``com`` is scanned (leading T):
-    the pre-sketched data rows plus the step index.  Carry =
-    (W, active, kappa); per-step outputs = (loss, q_t, check, detect,
-    faulty2) — the decision trace the host replays from."""
-    from repro.kernels import ops
-
-    n_data = A.shape[-2]
-    B, n_max = stat["byz"].shape
-    lr, alpha, beta, nu = stat["lr"], stat["alpha"], stat["beta"], stat["nu"]
-    p32 = stat["p"]
-    wi_b = jnp.broadcast_to(jnp.arange(n_max, dtype=jnp.uint32), (B, n_max))
-    zero_u = jnp.zeros((B,), jnp.uint32)
-
-    def contract(cr):                  # (B, I) row weights -> (B, d)
-        if shared:
-            return jnp.einsum("bi,id->bd", cr, A)
-        return ops.batched_coded_encode(cr[:, None, :], A, impl=impl)[:, 0]
-
-    def agg_value(coeff, tam, mask, cr_base):
-        aeff = jnp.where(tam, alpha[:, None], 1.0) * coeff
-        upd = contract(jnp.einsum("bw,bwi->bi", aeff, mask) * cr_base)
-        if has_bias:
-            tw = coeff * tam
-            upd = upd + (tw * beta[:, None]).sum(axis=1)[:, None] \
-                + (tw * nu[:, None]).sum(axis=1)[:, None] * noisevec[None]
-        return upd
-
-    def symbols(mask, cr_base, tam, SA_t, sk_one, sk_noise):
-        C = mask * cr_base[:, None, :]                       # (B, n, I)
-        skw = jnp.einsum("bwi,bik->bwk", C, SA_t[pid])
-        if has_bias:
-            add = beta[:, None, None] * sk_one[None, None] \
-                + nu[:, None, None] * sk_noise[None, None]
-        else:
-            add = 0.0
-        return jnp.where(tam[:, :, None],
-                         alpha[:, None, None] * skw + add, skw)
-
-    def step(carry, c):
-        W, active, kappa = carry
-        t = c["tix"]
-        t32 = t.astype(jnp.uint32)
-        live = t < stat["steps"]                              # (B,)
-
-        if shared:
-            resid = jnp.einsum("id,bd->bi", A, W) - y[None, :]
-        else:
-            resid = jnp.einsum("bid,bd->bi", A, W) - y
-        loss = (resid * resid).mean(axis=1)
-
-        # -- q*_t and the check coin (rngstream DECIDE) ----------------
-        f_t = jnp.maximum(stat["f0"] - kappa, 0)              # (B,) i32
-        lam = adaptive.lam_from_loss_arr(loss, jnp)
-        qad = adaptive.q_star_arr(f_t, p32, lam, jnp)
-        qvec = jnp.where(stat["qcode"] == 1, jnp.float32(1.0), stat["qfix"])
-        qvec = jnp.where(f_t > 0, qvec, 0.0)
-        q_t = jnp.where(stat["qcode"] == 3, qad,
-                        jnp.where(stat["qcode"] == 0, 0.0, qvec))
-        q_t = q_t.astype(jnp.float32)
-        db, _ = rngstream.threefry2x32(stat["dk0"], stat["dk1"],
-                                       jnp.broadcast_to(t32, (B,)), zero_u)
-        check = live & (rngstream.uniform01(db) < q_t)
-
-        # -- tamper coins, both phases (rngstream TAMPER) --------------
-        tb0, _ = rngstream.threefry2x32(stat["tk0"][:, None],
-                                        stat["tk1"][:, None], t32, wi_b)
-        tb1, _ = rngstream.threefry2x32(stat["tk0"][:, None],
-                                        stat["tk1"][:, None], t32,
-                                        _PH1 | wi_b)
-        elig = stat["byz"] & (live & (t >= stat["onset"]))[:, None]
-        tam1 = elig & (rngstream.uniform01(tb0) < p32[:, None])
-
-        # -- phase-1 layout: masked regroup when checking, else fast ---
-        pk0, _ = rngstream.threefry2x32(stat["pk0"][:, None],
-                                        stat["pk1"][:, None], t32, wi_b)
-        pk1, _ = rngstream.threefry2x32(stat["pk0"][:, None],
-                                        stat["pk1"][:, None], t32,
-                                        _PH1 | wi_b)
-        r1 = jnp.maximum(f_t, 1) + 1
-        sh_c, gr_c, m_c = ops.batched_regroup(pk0, active, r1)
-        rank = jnp.cumsum(active, axis=1, dtype=jnp.int32) - 1
-        n_act = active.sum(axis=1).astype(jnp.int32)
-        chk = check[:, None]
-        shard1 = jnp.where(chk, sh_c, jnp.where(active, rank, 0))
-        group1 = jnp.where(chk, gr_c, jnp.where(active, rank, -1))
-        group1 = jnp.where(live[:, None], group1, -1)
-        m1 = jnp.where(check, m_c, n_act)
-        mask1, rows1 = _shard_mask(shard1, group1, m1, n_data)
-        cr1 = resid * (2.0 / rows1)[:, None]
-
-        # -- detection verdict on sketch symbols -----------------------
-        skt1 = symbols(mask1, cr1, tam1, c["SA"], c["sk_one"], c["sk_noise"])
-        fault, _ = detect_groups_batched(skt1, group1, tau=TAU_DETECT)
-        det = check & fault
-
-        # -- aggregation (fast + clean-check; detect trials defer) -----
-        w_per = 1.0 / jnp.maximum(m1 * jnp.where(check, r1, 1),
-                                  1).astype(jnp.float32)
-        aggw = jnp.where(group1 >= 0, w_per[:, None], 0.0)
-        aggw = jnp.where(det[:, None], 0.0, aggw)
-        upd = agg_value(aggw, tam1, mask1, cr1)
-
-        # -- identify round: regroup at 2 max(f_t,1)+1, vote, eliminate
-        tam2 = det[:, None] & elig \
-            & (rngstream.uniform01(tb1) < p32[:, None])
-        r2 = 2 * jnp.maximum(f_t, 1) + 1
-
-        def identify(_):
-            sh2, gr2, m2 = ops.batched_regroup(pk1, active, r2)
-            gr2 = jnp.where(det[:, None], gr2, -1)
-            mask2, rows2 = _shard_mask(sh2, gr2, m2, n_data)
-            cr2 = resid * (2.0 / rows2)[:, None]
-            skt2 = symbols(mask2, cr2, tam2, c["SA"], c["sk_one"],
-                           c["sk_noise"])
-            wc, faulty = ops.batched_vote(skt2, gr2, tau=TAU_VOTE, impl=impl)
-            coeff = jnp.where(det[:, None],
-                              wc / jnp.maximum(m2, 1)[:, None], 0.0)
-            return agg_value(coeff, tam2, mask2, cr2), \
-                det[:, None] & faulty & (gr2 >= 0)
-
-        upd2, faulty2 = jax.lax.cond(
-            det.any(), identify,
-            lambda _: (jnp.zeros_like(W0), jnp.zeros((B, n_max), bool)),
-            None)
-        upd = upd + upd2
-
-        W = jnp.where(live[:, None], W - lr[:, None] * upd, W)
-        active = active & ~faulty2
-        kappa = kappa + faulty2.sum(axis=1).astype(kappa.dtype)
-        return (W, active, kappa), (loss, jnp.where(live, q_t, 0.0),
-                                    check, det, faulty2)
-
-    B_ = stat["byz"].shape[0]
-    init = (W0, stat["act0"], jnp.zeros(B_, jnp.int32))
-    (W, _, _), ys = jax.lax.scan(step, init, com)
-    losses, q_tr, check_tr, det_tr, faulty2_tr = ys
-    return W, losses, q_tr, check_tr, det_tr, faulty2_tr
-
-
-_device_ctl_scan = functools.partial(
-    jax.jit,
-    static_argnames=("shared", "has_bias", "impl"),
-    donate_argnames=("W0",),
-)(_device_ctl_core)
-
-
-# ---------------------------------------------------------------------------
-# Multi-device: shard the trial batch over a 1-D "trials" mesh
-# ---------------------------------------------------------------------------
-#
-# Trials are embarrassingly parallel — the scan body touches one trial's
-# row everywhere — so the device plane scales out with shard_map over a
-# ("trials",) mesh and NO cross-device collectives inside the scan: each
-# device runs the identical jitted scan on its slice of the batch.  The
-# batched Pallas kernels see per-device local shards (manual mode), so
-# the TPU kernel path needs no sharding rules of its own.
-
-
-def _trial_spec(ndim: int, axis: int | None):
-    """Full-rank PartitionSpec sharding ``axis`` over "trials"."""
-    from repro.sharding import trial_partition_spec
-
-    return trial_partition_spec(ndim, axis)
-
-
-@functools.lru_cache(maxsize=32)
-def _sharded_scan(mesh, shared: bool, has_filter: bool, has_bias: bool,
-                  impl: str | None, stat_sig: tuple, xs_sig: tuple,
-                  com_sig: tuple, a_ndim: int):
-    """Build (and cache) the shard_map-wrapped, jitted scan for a mesh.
-
-    The signature tuples carry (key, ndim) pairs so the in_specs trees
-    match the dict pytrees exactly; the cache keys on them plus the jit
-    statics, mirroring _device_scan's cache."""
-    from repro.sharding import shard_map
-
-    in_specs = (
-        _trial_spec(a_ndim, None if shared else 0),        # A
-        _trial_spec(a_ndim - 1, None if shared else 0),    # y
-        _trial_spec(2, 0),                                 # W0
-        {k: _trial_spec(nd, 0) for k, nd in stat_sig},
-        {k: _trial_spec(nd, 1) for k, nd in xs_sig},       # (T, B, ...)
-        {k: _trial_spec(nd, None) for k, nd in com_sig},   # replicated
-        _trial_spec(1, None),                              # noisevec
-        _trial_spec(1, 0),                                 # pid
-    )
-    out_specs = (_trial_spec(2, 0), _trial_spec(2, 1), _trial_spec(2, 1))
-    body = functools.partial(_scan_core, shared=shared,
-                             has_filter=has_filter, has_bias=has_bias,
-                             impl=impl)
-    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
-                   axis_names={"trials"}, check_vma=False)
-    return jax.jit(fn, donate_argnums=(2, 3, 4)), in_specs
-
-
-@functools.lru_cache(maxsize=32)
-def _sharded_fused_scan(mesh, impl: str | None, stat_sig: tuple,
-                        xs_sig: tuple, com_sig: tuple):
-    """shard_map-wrapped fused-data-plane scan for a mesh.
-
-    Same collective-free layout as _sharded_scan: the iterate, the
-    pending coefficient rows and every per-trial array shard on the
-    trial axis; the extended data matrix, the target and the per-step
-    sketch keys replicate.  The megakernel runs inside the manual
-    region, so it sees local (B/ndev)-sized shards and needs no GSPMD
-    partitioning rules — exactly like the other batched Pallas ops."""
-    from repro.sharding import shard_map
-
-    in_specs = (
-        _trial_spec(2, None),                              # rows
-        _trial_spec(1, None),                              # y (shared)
-        _trial_spec(2, 0),                                 # W0
-        _trial_spec(2, 0),                                 # cw0
-        {k: _trial_spec(nd, 0) for k, nd in stat_sig},
-        {k: _trial_spec(nd, 1) for k, nd in xs_sig},       # (T, B, ...)
-        {k: _trial_spec(nd, None) for k, nd in com_sig},   # replicated
-    )
-    out_specs = (_trial_spec(2, 0), _trial_spec(2, 1), _trial_spec(2, 1))
-    body = functools.partial(_fused_scan_core, impl=impl)
-    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
-                   axis_names={"trials"}, check_vma=False)
-    return jax.jit(fn, donate_argnums=(2, 3, 4, 5)), in_specs
-
-
-@functools.lru_cache(maxsize=32)
-def _sharded_device_ctl(mesh, shared: bool, has_bias: bool, impl: str | None,
-                        stat_sig: tuple, com_sig: tuple, a_ndim: int):
-    """shard_map-wrapped device-control-plane scan for a mesh.
-
-    The carry's protocol state (W, active mask, kappa) and every stat
-    array shard on the trial axis, so the scan runs collective-free:
-    each device owns its trials' control state end to end."""
-    from repro.sharding import shard_map
-
-    in_specs = (
-        _trial_spec(a_ndim, None if shared else 0),        # A
-        _trial_spec(a_ndim - 1, None if shared else 0),    # y
-        _trial_spec(2, 0),                                 # W0
-        {k: _trial_spec(nd, 0) for k, nd in stat_sig},
-        {k: _trial_spec(nd, None) for k, nd in com_sig},   # replicated
-        _trial_spec(1, None),                              # noisevec
-        _trial_spec(1, 0),                                 # pid
-    )
-    out_specs = (_trial_spec(2, 0), _trial_spec(2, 1), _trial_spec(2, 1),
-                 _trial_spec(2, 1), _trial_spec(2, 1), _trial_spec(3, 1))
-    body = functools.partial(_device_ctl_core, shared=shared,
-                             has_bias=has_bias, impl=impl)
-    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
-                   axis_names={"trials"}, check_vma=False)
-    return jax.jit(fn, donate_argnums=(2,)), in_specs
-
-
-def _pad_rows(arr: np.ndarray, axis: int, pad: int, fill=0) -> np.ndarray:
-    """Pad ``arr`` with ``fill`` along ``axis`` (idle-trial padding)."""
-    if pad == 0:
-        return arr
-    widths = [(0, 0)] * arr.ndim
-    widths[axis] = (0, pad)
-    return np.pad(arr, widths, constant_values=fill)
-
-
-# per-array padding fill values: -1 marks idle workers / no-filter rows,
-# everything else pads to an inert zero trial (live=False, weights 0)
-_PAD_FILL = {"group1": -1, "group2": -1, "fcode": -1, "farr": 1}
-
-
-# ---------------------------------------------------------------------------
-# Public entry point
+# Public entry point: compose plan -> stepcore -> shard -> pipeline
 # ---------------------------------------------------------------------------
 
 
 def run_batch_jax(specs, *, schedule: str = "auto",
                   kernel_impl: str | None = None,
                   chunk_trials: int | None = None,
-                  mesh="auto", fused: bool = True,
+                  mesh="auto", fused: bool | None = None,
                   stream_dtype: str = "f32") -> BatchResult:
     """Run B protocol trials with the jitted on-device data plane.
 
@@ -856,11 +186,15 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     fused: run the data plane through the fused protocol-step
         megakernel (``ops.fused_step``: update contraction, residual
         contraction and the per-step detection pre-sketch in ONE HBM
-        pass — see ``_fused_scan_core``).  Applies to the
-        shared-problem, non-filter, host-schedule path; other batches
-        silently use the unfused scan (the parity oracle, kept at
-        ``fused=False``).  Which path actually ran is reported as
-        ``BatchResult.fused_used``.
+        pass).  Applies to the shared-problem, non-filter,
+        host-schedule path.  ``None`` (default) auto-enables it
+        whenever eligible; an explicit ``True`` additionally emits a
+        ``FusedFallbackWarning`` if the plan has to demote to the
+        unfused scan (the parity oracle, kept at ``fused=False``).
+        Which path ran — and why — is reported as ``BatchResult.plan``
+        (``plan.fused``, ``plan.fallback_reason``,
+        ``plan.explain()``); the legacy ``BatchResult.fused_used``
+        mirror is kept for compatibility.
     stream_dtype: "f32" | "bf16" — storage dtype of the streamed data
         matrix on the fused path (bf16 halves its HBM traffic; all
         arithmetic and accumulators stay f32, the iterate stays f32).
@@ -880,14 +214,15 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     executing, and nothing synchronizes with the host until every chunk
     has been dispatched.
 
-    The returned ``BatchResult`` additionally carries ``schedule`` (the
-    control plane) and ``detect_flags`` (T, B) — the scan's on-device
-    sketch-detection verdicts per iteration, validated against the
-    schedule's check outcomes in tests/test_engine_parity.py.  Under
-    ``schedule="device"`` it also carries ``device_trace``, the raw
-    per-step decision trace (q / check / detect / faulty2 arrays) the
-    host control replay was reconstructed from; host modes set it to
-    ``None``.
+    The returned ``BatchResult`` additionally carries ``plan`` (the
+    resolved :class:`~repro.core.engineplan.plan.ExecutionPlan`),
+    ``schedule`` (the control plane) and ``detect_flags`` (T, B) — the
+    scan's on-device sketch-detection verdicts per iteration, validated
+    against the schedule's check outcomes in
+    tests/test_engine_parity.py.  Under ``schedule="device"`` it also
+    carries ``device_trace``, the raw per-step decision trace
+    (q / check / detect / faulty2 arrays) the host control replay was
+    reconstructed from; host modes set it to ``None``.
     """
     from repro.kernels import ops
 
@@ -895,23 +230,19 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
     if not specs:
         return BatchResult([], [], 0.0)
-    # resolve once: the choice becomes a jit-cache key for _device_scan,
-    # so a mid-process REPRO_KERNEL_IMPL change must not split the run
+    # resolve once: the choice becomes a jit-cache key for the step
+    # core, so a mid-process REPRO_KERNEL_IMPL change must not split
+    # the run
     kernel_impl = ops.resolve_impl(kernel_impl)
-    if stream_dtype not in ("f32", "bf16"):
-        raise ValueError(f"unknown stream_dtype {stream_dtype!r}; "
-                         "allowed values: ['f32', 'bf16']")
-    _validate(specs)
+    # early pure validation (stream dtype, problem dims, attack/filter
+    # tables, schedule-mode eligibility) — resolve_plan re-checks these
+    # for free once the mesh is known
+    planlib.validate_stream_dtype(stream_dtype)
+    planlib.validate_specs(specs)
+    mode = planlib.resolve_schedule_mode(specs, schedule)
+    device_mode = mode == "device"
     B = len(specs)
-    device_mode = schedule == "device"
     if device_mode:
-        flags = [not device_schedulable(s) for s in specs]
-        if any(flags):
-            raise ValueError(
-                'schedule="device" needs device-schedulable trials '
-                "(affine string attacks, mode none/deterministic/"
-                "randomized, no selective checks or membership events); "
-                f"offending: {spec_display_names(specs, flags)}")
         sched = None
         T = max(s.steps for s in specs)
         n_max = max(s.n for s in specs)
@@ -926,6 +257,9 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         # the documented jax-backend extras attached (empty here)
         out = run_batch(specs)
         out.detect_flags = np.zeros((0, B), bool)
+        out.plan = resolve_plan(
+            specs, schedule=schedule, fused=fused,
+            stream_dtype=stream_dtype, kernel_impl=kernel_impl)
         out.fused_used = False
         if device_mode:
             trace = dict(q=np.zeros((0, B), np.float32),
@@ -940,6 +274,35 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             out.schedule = sched
         return out
 
+    # -- trials mesh: shard the batch dimension across local devices ------
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"unknown mesh option {mesh!r}")
+        from repro.sharding import trials_mesh
+
+        mesh = trials_mesh()
+    if mesh is not None and tuple(mesh.axis_names) != ("trials",):
+        raise ValueError(
+            f"engine mesh must be 1-D ('trials',), got {mesh.axis_names}")
+    if mesh is not None:
+        from repro.sharding import mesh_num_devices
+
+        ndev = mesh_num_devices(mesh)
+    else:
+        ndev = None
+
+    # -- resolve the execution plan (pure) and surface fused demotion -----
+    plan = resolve_plan(specs, schedule=schedule, fused=fused,
+                        n_devices=ndev, chunk_trials=chunk_trials,
+                        stream_dtype=stream_dtype,
+                        kernel_impl=kernel_impl, n_max=n_max)
+    planlib.warn_on_fallback(plan)
+    use_fused = plan.fused
+    shared = plan.shared_problem
+    has_filter = plan.has_filter
+    has_bias = plan.has_bias
+    ndev = plan.n_devices
+
     # -- real problem arrays (f32 device copies) -------------------------
     problems: dict[tuple, tuple] = {}
     for s in specs:
@@ -947,7 +310,6 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         if key not in problems:
             problems[key] = make_problem(n_data=s.n_data, d=s.d,
                                          seed=s.problem_seed)
-    shared = len(problems) == 1
     pkeys = list(problems)
     pid_np = np.array([pkeys.index((s.problem_seed, s.n_data, s.d))
                        for s in specs], np.int32)
@@ -968,7 +330,6 @@ def run_batch_jax(specs, *, schedule: str = "auto",
 
     # -- per-trial statics ------------------------------------------------
     abn = np.array([AFFINE_ATTACKS[s.attack] for s in specs], np.float32)
-    has_bias = bool((abn[:, 1:] != 0).any())
     noisevec = (np.random.default_rng(0).normal(size=d).astype(np.float32)
                 if (abn[:, 2] != 0).any() else np.zeros(d, np.float32))
     base_stat = dict(
@@ -976,7 +337,6 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         alpha=abn[:, 0].copy(), beta=abn[:, 1].copy(), nu=abn[:, 2].copy(),
     )
     if device_mode:
-        has_filter = False
         byz = np.zeros((B, n_max), bool)
         act0 = np.zeros((B, n_max), bool)
         skeys = {k: np.zeros(B, np.uint32)
@@ -1009,7 +369,6 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     else:
         fcode = np.array([_FILTER_CODES.get(_filter_name(s), -1)
                           for s in specs], np.int32)
-        has_filter = bool((fcode >= 0).any())
         stat_np = dict(
             base_stat, fcode=fcode,
             farr=np.array([max(1, s.f) for s in specs], np.int32),
@@ -1040,10 +399,6 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     rows_np[-2] = 1.0
     rows_np[-1] = noisevec
     keys_t = np.uint32(0x9E3779B9) * (np.arange(T, dtype=np.uint32) + 1)
-    # fused scope gate: shared-problem, non-filter, host-schedule — the
-    # production-d hot path.  Everything else silently takes _scan_core
-    # (which doubles as the fused path's parity oracle at fused=False).
-    use_fused = bool(fused and not device_mode and shared and not has_filter)
     d_run = d
     if use_fused:
         # the megakernel sketches the rows in-pass, so there is no
@@ -1079,46 +434,19 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             # pre-sketched rows (its only per-step host input)
             common["tix"] = jnp.arange(T, dtype=jnp.int32)
 
-    # -- trials mesh: shard the batch dimension across local devices ------
-    if isinstance(mesh, str):
-        if mesh != "auto":
-            raise ValueError(f"unknown mesh option {mesh!r}")
-        from repro.sharding import trials_mesh
-
-        mesh = trials_mesh()
-    if mesh is not None and tuple(mesh.axis_names) != ("trials",):
-        raise ValueError(
-            f"engine mesh must be 1-D ('trials',), got {mesh.axis_names}")
-    ndev = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
-
-    # -- chunk trials to bound scan memory: only filter trials ever
-    #    materialize a (chunk, n, d) gradient stack ------------------------
-    if chunk_trials is None:
-        per_trial = n_max * d if has_filter else 4 * d
-        chunk_trials = max(1, min(B, (2 * _CHUNK_ELEMS * ndev)
-                                  // max(1, per_trial)))
-    elif chunk_trials < 1:
-        raise ValueError(f"chunk_trials must be >= 1, got {chunk_trials}")
-    chunk_trials = int(chunk_trials)
-    if mesh is not None:
-        chunk_trials = -(-chunk_trials // ndev) * ndev
-
-    # -- scan fn + device placement of the chunk-invariant operands -------
+    # -- step core (single jit or shard_map-wrapped) + placement of the
+    #    chunk-invariant operands ----------------------------------------
     if mesh is None:
-        if use_fused:
-            scan_fn = functools.partial(_fused_scan, impl=kernel_impl)
-        elif device_mode:
-            scan_fn = functools.partial(
-                _device_ctl_scan, shared=shared, has_bias=has_bias,
-                impl=kernel_impl)
-        else:
-            scan_fn = functools.partial(
-                _device_scan, shared=shared, has_filter=has_filter,
-                has_bias=has_bias, impl=kernel_impl)
-        # non-shared problems upload per-chunk slices in _stage — a full
-        # (B, n_data, d) upfront copy would defeat the chunk memory bound
-        # (the fused path reads A only through the extended rows matrix)
-        A_dev = jnp.asarray(A_np) if shared and not use_fused else None
+        scan_fn = functools.partial(
+            jitted_step_core, fused=use_fused, control=plan.control,
+            shared=shared, has_filter=has_filter, has_bias=has_bias,
+            impl=kernel_impl)
+        # non-shared problems upload per-chunk slices in the pipeline —
+        # a full (B, n_data, d) upfront copy would defeat the chunk
+        # memory bound (the fused path reads A only through the
+        # extended rows matrix)
+        A_dev = (rows_dev if use_fused else
+                 jnp.asarray(A_np) if shared else None)
         y_dev = jnp.asarray(y_np) if shared else None
         com_dev = common
         noise_dev = None if use_fused else jnp.asarray(noisevec)
@@ -1126,128 +454,32 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     else:
         stat_sig = tuple((k, v.ndim) for k, v in sorted(stat_np.items()))
         com_sig = tuple((k, int(v.ndim)) for k, v in sorted(common.items()))
-        if use_fused:
-            xs_sig = tuple((k, v.ndim) for k, v in sorted(xs_np.items()))
-            scan_fn, in_specs = _sharded_fused_scan(
-                mesh, kernel_impl, stat_sig, xs_sig, com_sig)
-        elif device_mode:
-            scan_fn, in_specs = _sharded_device_ctl(
-                mesh, shared, has_bias, kernel_impl,
-                stat_sig, com_sig, A_np.ndim)
-        else:
-            xs_sig = tuple((k, v.ndim) for k, v in sorted(xs_np.items()))
-            scan_fn, in_specs = _sharded_scan(
-                mesh, shared, has_filter, has_bias, kernel_impl,
-                stat_sig, xs_sig, com_sig, A_np.ndim)
+        xs_sig = (None if xs_np is None else
+                  tuple((k, v.ndim) for k, v in sorted(xs_np.items())))
+        scan_fn, in_specs = shard_wrap(
+            plan, mesh, stat_sig=stat_sig, xs_sig=xs_sig,
+            com_sig=com_sig, a_ndim=A_np.ndim)
         from jax.sharding import NamedSharding
 
         ns = lambda spec: NamedSharding(mesh, spec)              # noqa: E731
         put = lambda tree, spec: jax.device_put(                 # noqa: E731
             tree, jax.tree.map(ns, spec))
-        # fused arg order: (rows, y, W0, cw0, stat, xs, com); device-mode
-        # drops xs: (A, y, W0, stat, com, noise, pid)
-        i_com, i_noise, i_pid = \
-            (6, None, None) if use_fused else \
-            (4, 5, 6) if device_mode else (5, 6, 7)
         if use_fused:
             rows_dev = put(rows_dev, in_specs[0])   # replicate once
-            A_dev = None
+            A_dev = rows_dev
         else:
             A_dev = put(A_np, in_specs[0]) if shared else None
         y_dev = put(y_np, in_specs[1]) if shared else None
-        com_dev = put(common, in_specs[i_com])
+        com_dev = put(common, in_specs[6])
         noise_dev = (None if use_fused else
-                     put(noisevec, in_specs[i_noise]))
+                     put(noisevec, in_specs[7]))
 
-    def _stage(lo: int):
-        """H2D-transfer one chunk's per-trial arrays (async)."""
-        hi = min(lo + chunk_trials, B)
-        bs = hi - lo
-        pad = (-bs) % ndev
-        stat_c = {k: _pad_rows(v[lo:hi], 0, pad, _PAD_FILL.get(k, 0))
-                  for k, v in stat_np.items()}
-        xs_c = None if device_mode else {
-            k: _pad_rows(v[:, lo:hi], 1, pad, _PAD_FILL.get(k, 0))
-            for k, v in xs_np.items()}
-        W0 = np.zeros((bs + pad, d_run), np.float32)
-        if use_fused:
-            # pending-coefficient carry starts at zero (no update to
-            # apply on the first kernel call: the pipelined prologue)
-            cw0 = np.zeros((bs + pad, rows_dev.shape[0]), np.float32)
-            if mesh is None:
-                args = (rows_dev, y_dev, jnp.asarray(W0),
-                        jnp.asarray(cw0),
-                        {k: jnp.asarray(v) for k, v in stat_c.items()},
-                        {k: jnp.asarray(v) for k, v in xs_c.items()},
-                        com_dev)
-            else:
-                args = (rows_dev, y_dev, put(W0, in_specs[2]),
-                        put(cw0, in_specs[3]), put(stat_c, in_specs[4]),
-                        put(xs_c, in_specs[5]), com_dev)
-            return slice(lo, hi), bs, args
-        pid_c = _pad_rows(pid_np[lo:hi], 0, pad)
-        if mesh is None:
-            A_c = A_dev if shared else jnp.asarray(A_np[lo:hi])
-            y_c = y_dev if shared else jnp.asarray(y_np[lo:hi])
-            stat_d = {k: jnp.asarray(v) for k, v in stat_c.items()}
-            if device_mode:
-                args = (A_c, y_c, jnp.asarray(W0), stat_d,
-                        com_dev, noise_dev, jnp.asarray(pid_c))
-            else:
-                args = (A_c, y_c, jnp.asarray(W0), stat_d,
-                        {k: jnp.asarray(v) for k, v in xs_c.items()},
-                        com_dev, noise_dev, jnp.asarray(pid_c))
-        else:
-            A_c = A_dev if shared else put(
-                _pad_rows(A_np[lo:hi], 0, pad), in_specs[0])
-            y_c = y_dev if shared else put(
-                _pad_rows(y_np[lo:hi], 0, pad), in_specs[1])
-            if device_mode:
-                args = (A_c, y_c, put(W0, in_specs[2]),
-                        put(stat_c, in_specs[3]),
-                        com_dev, noise_dev, put(pid_c, in_specs[6]))
-            else:
-                args = (A_c, y_c, put(W0, in_specs[2]),
-                        put(stat_c, in_specs[3]), put(xs_c, in_specs[4]),
-                        com_dev, noise_dev, put(pid_c, in_specs[7]))
-        return slice(lo, hi), bs, args
-
-    # -- async chunk pipeline, depth 1: dispatch chunk k's scan, start
-    #    chunk k+1's H2D while it executes, then drain chunk k-1 before
-    #    staging k+2 — so at most two chunks' buffers are ever resident
-    #    and the chunk_trials memory bound holds ------------------------
-    W = np.empty((B, d), np.float64)
-    losses = np.empty((T, B))
-    det = np.empty((T, B), bool)
-    if device_mode:
-        q_tr = np.empty((T, B), np.float32)
-        check_tr = np.empty((T, B), bool)
-        faulty2_tr = np.empty((T, B, n_max), bool)
-
-    def _drain(sl, bs, out):                     # gathers; blocks
-        if device_mode:
-            Wc, lc, qc, cc, dc, fc = out
-            q_tr[:, sl] = np.asarray(qc)[:, :bs]
-            check_tr[:, sl] = np.asarray(cc)[:, :bs]
-            faulty2_tr[:, sl] = np.asarray(fc)[:, :bs]
-        else:
-            Wc, lc, dc = out
-        W[sl] = np.asarray(Wc, np.float64)[:bs, :d]
-        losses[:, sl] = np.asarray(lc, np.float64)[:, :bs]
-        det[:, sl] = np.asarray(dc)[:, :bs]
-
-    staged = _stage(0)
-    inflight = None
-    while staged is not None:
-        sl, bs, args = staged
-        out = scan_fn(*args)                     # async dispatch
-        nxt = sl.stop if sl.stop < B else None
-        staged = _stage(nxt) if nxt is not None else None
-        if inflight is not None:
-            _drain(*inflight)                    # backpressure point
-        inflight = (sl, bs, out)
-    if inflight is not None:
-        _drain(*inflight)
+    # -- async chunk pipeline (depth 1; see engineplan.pipeline) ----------
+    W, losses, det, extras = run_chunks(
+        scan_fn, plan, B=B, T=T, d=d, d_run=d_run, n_max=n_max,
+        mesh=mesh, in_specs=in_specs, A_np=A_np, y_np=y_np,
+        A_dev=A_dev, y_dev=y_dev, com_dev=com_dev, noise_dev=noise_dev,
+        pid_np=pid_np, stat_np=stat_np, xs_np=xs_np)
 
     # -- materialize results: control plane + device values ---------------
     from repro.core.simulation import SimResult
@@ -1257,8 +489,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         # reconstruct the full host control plane from the decision
         # trace (exact — the streams are counter-indexed, so schedule,
         # meters and eliminations are pure functions of the trace)
-        trace = dict(q=q_tr, check=check_tr, detect=det.copy(),
-                     faulty2=faulty2_tr)
+        trace = dict(q=extras["q"], check=extras["check"],
+                     detect=det.copy(), faulty2=extras["faulty2"])
         rec = ScheduleRecorder()
         control = replay_control_from_trace(specs, trace, rec)
         keys = rec.steps[0].keys() if rec.steps else ()
@@ -1275,7 +507,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             q_trace=ctrl.q_trace,
             identify_step=ctrl.identify_step,
         ))
-    out = BatchResult(specs, results, time.perf_counter() - t_start)
+    out = BatchResult(specs, results, time.perf_counter() - t_start,
+                      plan=plan)
     out.detect_flags = det
     out.schedule = sched
     out.device_trace = trace

@@ -1,0 +1,133 @@
+"""Chunked H2D/donation pipeline: stream the trial batch through the
+step core without ever exceeding the plan's chunk memory bound.
+
+Extracted from the tail of ``run_batch_jax``.  Chunks flow through an
+async pipeline of depth 1: dispatch chunk k's scan, start chunk k+1's
+H2D while it executes, then drain chunk k-1 before staging k+2 — so at
+most two chunks' buffers are ever resident and the ``chunk_trials``
+memory bound holds.  The last chunk pads up to a mesh multiple with
+inert trials (live=False, weights 0; ``PAD_FILL`` marks idle workers
+with -1) and the padding is sliced off the results.
+
+The unified step-core signature (see
+:mod:`repro.core.engineplan.stepcore`) means ONE staging function
+serves every path — the old per-path argument juggling is gone: unused
+slots stage as ``None``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# per-array padding fill values: -1 marks idle workers / no-filter rows,
+# everything else pads to an inert zero trial (live=False, weights 0)
+PAD_FILL = {"group1": -1, "group2": -1, "fcode": -1, "farr": 1}
+
+
+def pad_rows(arr: np.ndarray, axis: int, pad: int, fill=0) -> np.ndarray:
+    """Pad ``arr`` with ``fill`` along ``axis`` (idle-trial padding)."""
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return np.pad(arr, widths, constant_values=fill)
+
+
+def run_chunks(scan_fn, plan, *, B: int, T: int, d: int, d_run: int,
+               n_max: int, mesh, in_specs, A_np, y_np, A_dev, y_dev,
+               com_dev, noise_dev, pid_np, stat_np, xs_np):
+    """Drive the step core over the batch in plan-sized chunks.
+
+    ``A_dev``/``y_dev`` are the pre-placed chunk-invariant operands
+    (the fused path passes its extended rows matrix as ``A_dev``);
+    non-shared problems upload per-chunk slices of ``A_np``/``y_np``
+    instead — a full (B, n_data, d) upfront copy would defeat the chunk
+    memory bound.  Returns ``(W, losses, det, extras)`` where
+    ``extras`` is the device control plane's decision-trace dict
+    (q/check/faulty2) or ``None`` under a host schedule."""
+    fused = plan.fused
+    device_mode = plan.control == "device"
+    shared = plan.shared_problem
+    ndev = plan.n_devices
+    chunk_trials = plan.chunk_trials
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+
+        ns = lambda spec: NamedSharding(mesh, spec)          # noqa: E731
+
+        def dev(x, i):
+            if x is None:
+                return None
+            return jax.device_put(x, jax.tree.map(ns, in_specs[i]))
+    else:
+        def dev(x, i):
+            if x is None:
+                return None
+            if isinstance(x, dict):
+                return {k: jnp.asarray(v) for k, v in x.items()}
+            return jnp.asarray(x)
+
+    def _stage(lo: int):
+        """H2D-transfer one chunk's per-trial arrays (async)."""
+        hi = min(lo + chunk_trials, B)
+        bs = hi - lo
+        pad = (-bs) % ndev
+        stat_c = {k: pad_rows(v[lo:hi], 0, pad, PAD_FILL.get(k, 0))
+                  for k, v in stat_np.items()}
+        xs_c = None if xs_np is None else {
+            k: pad_rows(v[:, lo:hi], 1, pad, PAD_FILL.get(k, 0))
+            for k, v in xs_np.items()}
+        W0 = np.zeros((bs + pad, d_run), np.float32)
+        # fused: the pending-coefficient carry starts at zero (no update
+        # to apply on the first kernel call: the pipelined prologue)
+        cw0 = (np.zeros((bs + pad, A_dev.shape[0]), np.float32)
+               if fused else None)
+        pid_c = None if fused else pad_rows(pid_np[lo:hi], 0, pad)
+        if fused or shared:
+            A_c, y_c = A_dev, y_dev
+        else:
+            A_c = dev(pad_rows(A_np[lo:hi], 0, pad), 0)
+            y_c = dev(pad_rows(y_np[lo:hi], 0, pad), 1)
+        args = (A_c, y_c, dev(W0, 2), dev(cw0, 3), dev(stat_c, 4),
+                dev(xs_c, 5), com_dev, noise_dev, dev(pid_c, 8))
+        return slice(lo, hi), bs, args
+
+    W = np.empty((B, d), np.float64)
+    losses = np.empty((T, B))
+    det = np.empty((T, B), bool)
+    if device_mode:
+        q_tr = np.empty((T, B), np.float32)
+        check_tr = np.empty((T, B), bool)
+        faulty2_tr = np.empty((T, B, n_max), bool)
+
+    def _drain(sl, bs, out):                     # gathers; blocks
+        if device_mode:
+            Wc, lc, qc, cc, dc, fc = out
+            q_tr[:, sl] = np.asarray(qc)[:, :bs]
+            check_tr[:, sl] = np.asarray(cc)[:, :bs]
+            faulty2_tr[:, sl] = np.asarray(fc)[:, :bs]
+        else:
+            Wc, lc, dc = out
+        W[sl] = np.asarray(Wc, np.float64)[:bs, :d]
+        losses[:, sl] = np.asarray(lc, np.float64)[:, :bs]
+        det[:, sl] = np.asarray(dc)[:, :bs]
+
+    staged = _stage(0)
+    inflight = None
+    while staged is not None:
+        sl, bs, args = staged
+        out = scan_fn(*args)                     # async dispatch
+        nxt = sl.stop if sl.stop < B else None
+        staged = _stage(nxt) if nxt is not None else None
+        if inflight is not None:
+            _drain(*inflight)                    # backpressure point
+        inflight = (sl, bs, out)
+    if inflight is not None:
+        _drain(*inflight)
+
+    extras = (dict(q=q_tr, check=check_tr, faulty2=faulty2_tr)
+              if device_mode else None)
+    return W, losses, det, extras

@@ -1,0 +1,407 @@
+"""ExecutionPlan: the engine's path selection as an inspectable value.
+
+``run_batch(backend="jax")`` used to pick its execution path — host vs
+on-device control plane, fused megakernel vs unfused scan, sharded vs
+single-device, chunk size — through predicates scattered across
+``run_batch_jax``, with the fused fallback silently demoting.  This
+module resolves all of it ONCE, up front, into a frozen
+:class:`ExecutionPlan`:
+
+* :func:`resolve_plan` is pure — specs plus keyword knobs in, plan out —
+  so every path decision is unit-testable without touching a device
+  (tests/test_execution_plan.py covers the full SCENARIOS grid);
+* :meth:`ExecutionPlan.explain` names which path was picked and *why*,
+  including the reason a requested fused run demoted
+  (:attr:`ExecutionPlan.fallback_reason`, surfaced as a
+  :class:`FusedFallbackWarning` by the engine facade);
+* the schedulability predicates (``value_independent_control``,
+  ``device_schedulable``) and the affine-attack / filter tables live
+  here as the single source of truth — ``repro.core.engine`` and
+  ``repro.core.engine_jax`` re-export them.
+
+Layering contract (enforced by ruff's banned-import rule and
+tests/test_execution_plan.py): ``engineplan`` never imports
+``repro.core.engine`` or ``repro.core.engine_jax`` — the plan layer is
+below the engines, which import *it*.  The predicates are duck-typed
+over any object with TrialSpec's fields, which is what keeps this
+module import-free of the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+# affine attack table: g' = alpha * g + beta * 1 + nu * noisevec, where
+# noisevec is ATTACKS["noise"]'s fixed default_rng(0) draw.  Mirrors
+# repro.core.simulation.ATTACKS exactly.
+AFFINE_ATTACKS: dict[str, tuple[float, float, float]] = {
+    "none": (1.0, 0.0, 0.0),
+    "sign_flip": (-5.0, 0.0, 0.0),
+    "scale": (10.0, 0.0, 0.0),
+    "drift": (1.0, 1.0, 0.0),
+    "zero": (0.0, 0.0, 0.0),
+    "noise": (1.0, 0.0, 1.0),
+}
+
+# attacks whose detectability never depends on gradient magnitudes: they
+# perturb by a fixed nonzero offset ("drift", "noise") or never perturb
+# ("none"), so WHO gets caught is a pure function of the tamper/assignment
+# coin flips.  "sign_flip"/"scale"/"zero" scale the gradient itself and
+# become undetectable exactly at the convergence floor.
+VALUE_INDEPENDENT_ATTACKS = frozenset({"none", "drift", "noise"})
+
+FILTER_CODES = {"mean": 0, "median": 1, "krum": 2}
+
+HOST_SCHEDULE_MODES = ("auto", "vector", "proxy", "oracle")
+STREAM_DTYPES = ("f32", "bf16")
+
+# element budget for sizing trials-per-device-chunk: the scan's largest
+# live array is ~4 (B, d) buffers (W + update terms), or the (B, n, d)
+# gradient stack when filter trials force it — either way the chunk is
+# chosen to keep ~1 GiB of f32 in flight
+CHUNK_ELEMS = 1 << 27
+
+
+class FusedFallbackWarning(UserWarning):
+    """``fused=True`` was requested but the plan demoted to the unfused
+    scan; the message (and ``BatchResult.plan.fallback_reason``) says
+    why.  Filter with ``warnings.filterwarnings`` by this category."""
+
+
+# ---------------------------------------------------------------------------
+# Schedulability predicates (duck-typed over TrialSpec-shaped objects)
+# ---------------------------------------------------------------------------
+
+
+def filter_name(spec) -> str | None:
+    """The gradient-filter baseline name, or None for protocol trials."""
+    if not spec.mode.startswith("filter"):
+        return None
+    return spec.mode.split(":", 1)[1] if ":" in spec.mode else spec.filter_name
+
+
+def is_adaptive(spec) -> bool:
+    """Adaptive q*_t: randomized mode with no fixed check probability."""
+    return spec.q is None and spec.mode == "randomized"
+
+
+def value_independent_control(spec) -> bool:
+    """True when the trial's control flow (check decisions, detection
+    outcomes, identified sets) does not depend on gradient values, i.e.
+    the schedule can be replayed without running the data plane at all.
+    The jax backend's ``proxy_schedulable`` is the same predicate."""
+    if spec.q is None and spec.mode == "randomized":
+        return False          # adaptive q*_t depends on the observed loss
+    if not spec.byz:
+        return True           # nothing ever tampers -> nothing to detect
+    if spec.mode in ("none",) or spec.mode.startswith("filter"):
+        return True           # no detection phase at all
+    return isinstance(spec.attack, str) \
+        and spec.attack in VALUE_INDEPENDENT_ATTACKS
+
+
+def device_schedulable(spec) -> bool:
+    """True when the trial's control plane can run INSIDE the jitted
+    device scan (``schedule="device"``) under the ``rng="device"``
+    stream contract: affine attacks, plain none/deterministic/randomized
+    modes (adaptive q* included — that's the point), no selective
+    checks, no crash/recover events, no filters, no draco.
+    Value-DEPENDENT classes are fine; what's excluded is control flow
+    the scan cannot express (per-worker selective coins, membership
+    churn injected from outside)."""
+    if not isinstance(spec.attack, str):
+        return False
+    return (spec.attack in AFFINE_ATTACKS
+            and spec.mode in ("none", "deterministic", "randomized")
+            and not spec.selective
+            and not spec.events)
+
+
+def spec_display_names(specs, flags) -> list[str]:
+    """Human-readable names for the specs where ``flags`` is truthy —
+    the label when one was given, otherwise a descriptive
+    ``spec[i](mode/attack...)`` so error messages never degenerate to
+    bare indices."""
+    out = []
+    for i, (s, bad) in enumerate(zip(specs, flags)):
+        if not bad:
+            continue
+        if s.label:
+            out.append(s.label)
+        else:
+            q = "adaptive" if s.q is None else f"q={s.q}"
+            out.append(f"spec[{i}]({s.mode}/{s.attack}/{q})")
+    return out
+
+
+def nearest_schedule(specs) -> str:
+    """The least-degraded schedule mode that accepts every spec in the
+    batch: "device" keeps the control plane on device (valid when every
+    trial is device-schedulable), else "oracle" — the host replay that
+    accepts every engine trial class."""
+    return "device" if all(device_schedulable(s) for s in specs) \
+        else "oracle"
+
+
+# ---------------------------------------------------------------------------
+# Validation (shared by resolve_plan and the engine facade)
+# ---------------------------------------------------------------------------
+
+
+def validate_stream_dtype(stream_dtype: str) -> None:
+    if stream_dtype not in STREAM_DTYPES:
+        raise ValueError(f"unknown stream_dtype {stream_dtype!r}; "
+                         f"allowed values: {list(STREAM_DTYPES)}")
+
+
+def validate_specs(specs) -> None:
+    """Reject batches the jax data plane cannot represent, naming the
+    offending specs and the nearest plan that would accept them."""
+    dims = {(s.n_data, s.d) for s in specs}
+    if len(dims) > 1:
+        # same contract as the numpy backend (engine.run_batch): a batch
+        # must share problem dimensions — catching it here replaces an
+        # opaque broadcast error in the (B, n_data, d) copy loop
+        counts = {dm: sum(1 for s in specs if (s.n_data, s.d) == dm)
+                  for dm in dims}
+        major = max(counts, key=counts.get)
+        flags = [(s.n_data, s.d) != major for s in specs]
+        raise ValueError(
+            f"trials must share (n_data, d), got {sorted(dims)}; "
+            f"offending: {spec_display_names(specs, flags)} — nearest "
+            f"accepting plan: one run_batch call per (n_data, d) group")
+    for i, s in enumerate(specs):
+        if not isinstance(s.attack, str) or s.attack not in AFFINE_ATTACKS:
+            raise NotImplementedError(
+                f"jax backend supports the affine attack table "
+                f"{sorted(AFFINE_ATTACKS)}, got {s.attack!r} "
+                f"({spec_display_names(specs, [j == i for j in range(len(specs))])[0]}) "
+                f'— nearest accepting plan: backend="numpy" (the '
+                f"reference engine runs arbitrary attack callables)")
+        name = filter_name(s)
+        if name is not None and name not in FILTER_CODES:
+            raise NotImplementedError(
+                f"jax backend supports filters {sorted(FILTER_CODES)}, "
+                f"got {name!r} "
+                f"({spec_display_names(specs, [j == i for j in range(len(specs))])[0]}) "
+                f'— nearest accepting plan: backend="numpy"')
+
+
+def resolve_schedule_mode(specs, mode: str, *, host_only: bool = False) -> str:
+    """Resolve/validate the schedule mode for a batch.
+
+    Returns the concrete mode ("vector" | "proxy" | "oracle" |
+    "device"); raises ValueError naming the offending specs AND the
+    nearest plan that would accept them.  ``host_only=True`` is
+    ``build_schedule``'s contract (mode "device" is not a host
+    schedule — it is handled by the engine facade itself)."""
+    if mode == "device" and not host_only:
+        flags = [not device_schedulable(s) for s in specs]
+        if any(flags):
+            raise ValueError(
+                'schedule="device" needs device-schedulable trials '
+                "(affine string attacks, mode none/deterministic/"
+                "randomized, no selective checks or membership events); "
+                f"offending: {spec_display_names(specs, flags)}; nearest "
+                'accepting plan: schedule="oracle" (the host replay '
+                "accepts every engine trial class)")
+        return "device"
+    eligible = all(value_independent_control(s) for s in specs)
+    if mode == "auto":
+        return "vector" if eligible else "oracle"
+    if mode in ("proxy", "vector"):
+        if not eligible:
+            flags = [not value_independent_control(s) for s in specs]
+            offending = [s for s, bad in zip(specs, flags) if bad]
+            raise ValueError(
+                f"{mode} schedule invalid for value-dependent trials: "
+                f"{spec_display_names(specs, flags)} — use "
+                'schedule="device" (on-device control plane) or '
+                '"oracle" for these; nearest accepting plan: '
+                f'schedule="{nearest_schedule(offending)}"')
+        return mode
+    if mode == "oracle":
+        return "oracle"
+    raise ValueError(
+        f"unknown schedule mode {mode!r} (build_schedule handles "
+        f"host modes auto/vector/proxy/oracle; \"device\" lives in "
+        f"run_batch_jax)")
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Every path decision of one jax-backend batch, resolved up front.
+
+    Supersedes the ad-hoc ``BatchResult.fused_used`` flag (kept as a
+    plain mirror attribute for compatibility): ``result.plan`` carries
+    the whole picture and ``result.plan.explain()`` says why."""
+
+    backend: str                 # "jax"
+    schedule_mode: str           # "vector" | "proxy" | "oracle" | "device"
+    control: str                 # "host" | "device"
+    fused: bool                  # megakernel data plane actually used
+    fused_requested: bool | None  # True/False explicit; None = auto
+    fallback_reason: str | None  # set whenever fused could not engage
+    shared_problem: bool         # one (problem_seed, n_data, d) for all
+    has_filter: bool             # gradient-filter baselines in the batch
+    has_bias: bool               # some attack has nonzero beta/nu terms
+    sharded: bool                # shard_map over the ("trials",) mesh
+    n_devices: int               # mesh size (1 when unsharded)
+    chunk_trials: int            # trials per device pass (mesh-rounded)
+    stream_dtype: str            # "f32" | "bf16" (fused rows storage)
+    kernel_impl: str | None      # resolved batched-kernel dispatch
+    n_trials: int                # batch size B
+    steps: int                   # scan length T (max steps over specs)
+
+    def explain(self) -> str:
+        """Human-readable account of which path was picked and why."""
+        sched_why = {
+            "vector": "all trials value-independent -> batched "
+                      "control-only replay (no data plane)",
+            "proxy": "tiny-problem full-engine replay (parity oracle "
+                     "for \"vector\")",
+            "oracle": "value-dependent trials present -> real-problem "
+                      "host replay",
+            "device": "control plane fused into the jitted scan "
+                      "(rng=\"device\" counter streams)",
+        }[self.schedule_mode]
+        if self.fused:
+            fused_line = ("ON — shared problem, no filter baselines, "
+                          "host schedule")
+        elif self.fused_requested is False:
+            fused_line = "OFF — disabled by fused=False"
+        else:
+            req = ("requested but demoted"
+                   if self.fused_requested else "auto-off")
+            fused_line = f"OFF ({req}) — {self.fallback_reason}"
+        if self.sharded:
+            shard_line = (f"shard_map over a {self.n_devices}-device "
+                          f"(\"trials\",) mesh")
+        else:
+            shard_line = "single device (plain jit)"
+        return "\n".join([
+            f"ExecutionPlan[backend={self.backend}, B={self.n_trials}, "
+            f"T={self.steps}]",
+            f"  schedule : {self.schedule_mode} ({self.control} control "
+            f"plane) — {sched_why}",
+            f"  fused    : {fused_line}",
+            f"  sharding : {shard_line}, chunk={self.chunk_trials} "
+            f"trials/pass",
+            f"  kernels  : impl={self.kernel_impl}, "
+            f"stream_dtype={self.stream_dtype}, "
+            f"bias_terms={'yes' if self.has_bias else 'no'}, "
+            f"filters={'yes' if self.has_filter else 'no'}",
+        ])
+
+
+def resolve_plan(specs, *, schedule: str = "auto",
+                 fused: bool | None = None,
+                 n_devices: int | None = None,
+                 chunk_trials: int | None = None,
+                 stream_dtype: str = "f32",
+                 kernel_impl: str | None = None,
+                 n_max: int | None = None) -> ExecutionPlan:
+    """Resolve one batch's execution plan.  Pure: specs + knobs in,
+    :class:`ExecutionPlan` out — no devices touched, so path selection
+    is unit-testable for every spec class.
+
+    ``fused``: None = auto (use the megakernel whenever eligible; no
+    warning on demotion), True = explicit request (the facade warns
+    with :class:`FusedFallbackWarning` when demoted), False = off.
+    ``n_devices``: mesh size, or None for the single-device jit path.
+    ``n_max``: worker-axis width used for filter-chunk sizing; defaults
+    to ``max(s.n)``.
+    """
+    specs = list(specs)
+    if not specs:
+        raise ValueError("resolve_plan needs at least one TrialSpec")
+    validate_stream_dtype(stream_dtype)
+    validate_specs(specs)
+    mode = resolve_schedule_mode(specs, schedule)
+    control = "device" if mode == "device" else "host"
+
+    B = len(specs)
+    d = specs[0].d
+    steps = max(s.steps for s in specs)
+    if n_max is None:
+        n_max = max(s.n for s in specs)
+    shared = len({(s.problem_seed, s.n_data, s.d) for s in specs}) == 1
+    # the device control plane never compiles the filter branch
+    # (device_schedulable excludes filter modes)
+    has_filter = control == "host" \
+        and any(FILTER_CODES.get(filter_name(s), -1) >= 0 for s in specs)
+    has_bias = any(AFFINE_ATTACKS[s.attack][1] != 0.0
+                   or AFFINE_ATTACKS[s.attack][2] != 0.0 for s in specs)
+
+    # fused scope gate: shared-problem, non-filter, host-schedule — the
+    # production-d hot path.  Everything else takes the unfused scan
+    # (which doubles as the fused path's parity oracle at fused=False),
+    # and the reason is recorded instead of silently dropped.
+    fallback_reason = None
+    use_fused = False
+    if fused is not False:
+        if steps == 0:
+            fallback_reason = ("all trials have steps == 0: nothing to "
+                               "scan")
+        elif control == "device":
+            fallback_reason = (
+                'schedule="device" fuses the control plane into the '
+                "scan; the fused megakernel covers host-schedule runs "
+                "only")
+        elif not shared:
+            n_prob = len({(s.problem_seed, s.n_data, s.d) for s in specs})
+            fallback_reason = (
+                f"trials span {n_prob} distinct problems; the fused "
+                f"megakernel streams ONE shared extended data matrix")
+        elif has_filter:
+            flags = [FILTER_CODES.get(filter_name(s), -1) >= 0
+                     for s in specs]
+            fallback_reason = (
+                f"filter baseline trials "
+                f"({spec_display_names(specs, flags)}) materialize the "
+                f"(B, n, d) gradient stack, which only the unfused scan "
+                f"compiles")
+        else:
+            use_fused = True
+
+    # chunk sizing: bound scan memory; only filter trials ever
+    # materialize a (chunk, n, d) gradient stack
+    ndev = n_devices if n_devices is not None else 1
+    if chunk_trials is None:
+        per_trial = n_max * d if has_filter else 4 * d
+        chunk = max(1, min(B, (2 * CHUNK_ELEMS * ndev)
+                           // max(1, per_trial)))
+    elif chunk_trials < 1:
+        raise ValueError(f"chunk_trials must be >= 1, got {chunk_trials}")
+    else:
+        chunk = int(chunk_trials)
+    if n_devices is not None:
+        chunk = -(-chunk // ndev) * ndev
+
+    return ExecutionPlan(
+        backend="jax", schedule_mode=mode, control=control,
+        fused=use_fused, fused_requested=fused,
+        fallback_reason=fallback_reason, shared_problem=shared,
+        has_filter=has_filter, has_bias=has_bias,
+        sharded=n_devices is not None, n_devices=ndev,
+        chunk_trials=chunk, stream_dtype=stream_dtype,
+        kernel_impl=kernel_impl, n_trials=B, steps=steps,
+    )
+
+
+def warn_on_fallback(plan: ExecutionPlan, stacklevel: int = 3) -> None:
+    """Emit :class:`FusedFallbackWarning` when an explicit ``fused=True``
+    request was demoted to the unfused scan (the PR-7 debugging
+    dead-end: the fallback used to be silent).  Zero-step batches never
+    warn — there is no scan to fuse."""
+    if plan.fused_requested is True and not plan.fused and plan.steps > 0:
+        warnings.warn(
+            f"fused=True requested but the plan fell back to the "
+            f"unfused scan: {plan.fallback_reason} "
+            f"(see BatchResult.plan.explain())",
+            FusedFallbackWarning, stacklevel=stacklevel)

@@ -76,7 +76,9 @@ def resolve_impl(impl: str | None) -> str:
     the default impl (an unset or empty variable means "auto").
     Long-lived callers that bake the choice into a jit cache key (the
     jitted engine) resolve ONCE up front so a later env change can't
-    produce a half-and-half run.
+    produce a half-and-half run; the engine records the resolved value
+    as ``ExecutionPlan.kernel_impl`` (repro.core.engineplan.plan), so
+    ``result.plan.explain()`` reports which dispatch actually ran.
     """
     if impl is None:
         env = os.environ.get("REPRO_KERNEL_IMPL") or None

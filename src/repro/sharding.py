@@ -113,6 +113,13 @@ def trials_mesh(max_devices: int | None = None) -> Mesh | None:
     return make_mesh((len(devs),), ("trials",), devices=devs)
 
 
+def mesh_num_devices(mesh: Mesh) -> int:
+    """Device count of a trials mesh — the chunk-rounding granularity
+    the plan layer needs without importing jax (ExecutionPlan records
+    it as ``n_devices``)."""
+    return int(np.prod(list(mesh.shape.values())))
+
+
 def trial_partition_spec(ndim: int, axis: int | None) -> P:
     """Full-rank PartitionSpec sharding ``axis`` over the ``"trials"``
     mesh axis (``None`` = fully replicated).  Shared by the scenario

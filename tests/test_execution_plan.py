@@ -1,0 +1,249 @@
+"""Unit grid over the ExecutionPlan layer (repro.core.engineplan.plan).
+
+``resolve_plan`` is pure, so every path decision — schedule mode, fused
+engagement, sharding, chunk sizing — is asserted here for the full
+``SCENARIOS`` matrix without touching a device.  The one warning path
+that needs the real engine (``FusedFallbackWarning`` on an explicit
+``fused=True`` demotion) runs a tiny jax-backend batch at the end.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import warnings
+
+import pytest
+
+from repro.core.engine import SCENARIOS, TrialSpec
+from repro.core.engineplan.plan import (
+    FusedFallbackWarning,
+    device_schedulable,
+    resolve_plan,
+    resolve_schedule_mode,
+    value_independent_control,
+    warn_on_fallback,
+)
+
+
+def _spec(**kw) -> TrialSpec:
+    base = dict(seed=0, steps=10, mode="randomized", q=0.2,
+                attack="sign_flip", byz=(2, 5))
+    base.update(kw)
+    return TrialSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# resolve_plan over the full SCENARIOS matrix
+# ---------------------------------------------------------------------------
+
+# expected (schedule_mode, fused, sharded) per scenario under default
+# knobs (schedule="auto", fused=None, single device).  Every scenario
+# holds at least one value-DEPENDENT trial (adaptive q*, or a
+# detectability-scaling attack vs an active adversary), so "auto"
+# resolves to the oracle replay batch-wide; fused engages everywhere the
+# batch is shared-problem and filter-free.
+_EXPECT = {
+    "paper_core": ("oracle", False, False),      # filter baselines demote
+    "attack_sweep": ("oracle", True, False),
+    "late_onset": ("oracle", True, False),
+    "elastic_churn": ("oracle", True, False),
+    "selective": ("oracle", True, False),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenarios_grid_default_plan(name):
+    specs = SCENARIOS[name].expand()
+    plan = resolve_plan(specs)
+    assert (plan.schedule_mode, plan.fused, plan.sharded) == _EXPECT[name]
+    assert plan.control == "host"
+    assert plan.n_devices == 1
+    assert plan.n_trials == len(specs)
+    assert plan.steps == max(s.steps for s in specs)
+    assert plan.shared_problem is True
+    if plan.fused:
+        assert plan.fallback_reason is None
+    else:
+        assert plan.fallback_reason is not None
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenarios_grid_forced_8_device_mesh(name):
+    specs = SCENARIOS[name].expand()
+    plan = resolve_plan(specs, n_devices=8)
+    assert plan.sharded is True
+    assert plan.n_devices == 8
+    assert plan.chunk_trials % 8 == 0           # mesh-multiple rounding
+    # sharding never changes the path selection itself
+    assert (plan.schedule_mode, plan.fused) == _EXPECT[name][:2]
+
+
+def test_value_independent_subset_takes_vector():
+    # fixed-q randomized vs drift: detection outcomes are value-
+    # independent, so "auto" picks the control-only vectorized replay
+    specs = [s for s in SCENARIOS["attack_sweep"].expand()
+             if s.attack == "drift" and s.q is not None]
+    assert specs and all(value_independent_control(s) for s in specs)
+    plan = resolve_plan(specs)
+    assert (plan.schedule_mode, plan.fused) == ("vector", True)
+
+
+def test_device_schedule_plan():
+    specs = SCENARIOS["attack_sweep"].expand()
+    assert all(device_schedulable(s) for s in specs)
+    plan = resolve_plan(specs, schedule="device")
+    assert (plan.schedule_mode, plan.control) == ("device", "device")
+    assert plan.fused is False
+    assert "host-schedule" in plan.fallback_reason
+
+
+# ---------------------------------------------------------------------------
+# chunk sizing edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_trials_zero_rejected():
+    with pytest.raises(ValueError, match="chunk_trials must be >= 1"):
+        resolve_plan([_spec()], chunk_trials=0)
+
+
+def test_chunk_trials_one_rounds_to_mesh():
+    plan = resolve_plan([_spec() for _ in range(20)], chunk_trials=1,
+                        n_devices=8)
+    assert plan.chunk_trials == 8
+
+
+def test_chunk_auto_bounded_by_batch():
+    plan = resolve_plan([_spec() for _ in range(3)])
+    assert plan.chunk_trials == 3
+
+
+def test_filter_trials_shrink_chunk():
+    big = dict(n_data=256, d=4096, steps=1, n=8)
+    plain = resolve_plan([_spec(**big) for _ in range(10_000)])
+    filt = resolve_plan([_spec(mode="filter:median", **big)
+                         for _ in range(10_000)])
+    # the (chunk, n, d) gradient stack budget divides the chunk by ~n/4
+    assert filt.chunk_trials < plain.chunk_trials
+
+
+# ---------------------------------------------------------------------------
+# schedule-mode errors: offending label + nearest accepting plan
+# ---------------------------------------------------------------------------
+
+
+def test_vector_error_names_label_and_nearest_plan():
+    specs = [_spec(label="adaptive-run", q=None)]
+    with pytest.raises(ValueError) as e:
+        resolve_schedule_mode(specs, "vector")
+    assert "adaptive-run" in str(e.value)
+    assert 'nearest accepting plan: schedule="device"' in str(e.value)
+
+
+def test_vector_error_nearest_plan_degrades_to_oracle():
+    # selective checks exclude the device control plane, so the nearest
+    # accepting plan falls back one more notch
+    specs = [_spec(q=None, selective=True)]
+    with pytest.raises(ValueError) as e:
+        resolve_schedule_mode(specs, "proxy")
+    assert 'nearest accepting plan: schedule="oracle"' in str(e.value)
+
+
+def test_device_error_names_offending_spec():
+    specs = [_spec(label="churny", events=SCENARIOS[
+        "elastic_churn"].faults[0].events)]
+    with pytest.raises(ValueError) as e:
+        resolve_schedule_mode(specs, "device")
+    assert "churny" in str(e.value)
+    assert 'schedule="oracle"' in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# fused fallback: recorded reason, explain(), warning
+# ---------------------------------------------------------------------------
+
+
+def test_explain_names_fused_fallback():
+    specs = [_spec(), _spec(mode="filter:krum", label="krum-baseline")]
+    plan = resolve_plan(specs, fused=True)
+    assert plan.fused is False
+    assert "krum-baseline" in plan.fallback_reason
+    text = plan.explain()
+    assert "requested but demoted" in text
+    assert "krum-baseline" in text
+
+
+def test_explain_on_and_off_paths():
+    on = resolve_plan([_spec()])
+    assert "fused    : ON" in on.explain()
+    off = resolve_plan([_spec()], fused=False)
+    assert "disabled by fused=False" in off.explain()
+
+
+def test_auto_fallback_records_reason_without_warning():
+    plan = resolve_plan([_spec(mode="filter:median")])   # fused=None auto
+    assert plan.fused is False
+    assert "filter baseline" in plan.fallback_reason
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        warn_on_fallback(plan)                           # no warning: auto
+
+
+def test_zero_steps_never_warns():
+    plan = resolve_plan([_spec(steps=0, mode="filter:median")], fused=True)
+    assert plan.fused is False
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        warn_on_fallback(plan)
+
+
+def test_explicit_fused_demotion_warns():
+    plan = resolve_plan([_spec(mode="filter:median")], fused=True)
+    with pytest.warns(FusedFallbackWarning, match="filter baseline"):
+        warn_on_fallback(plan)
+
+
+def test_engine_emits_fused_fallback_warning():
+    from repro.core.engine import run_batch
+
+    specs = [dataclasses.replace(_spec(), steps=3, mode="filter:median")]
+    with pytest.warns(FusedFallbackWarning, match="filter baseline"):
+        out = run_batch(specs, backend="jax", fused=True)
+    assert out.fused_used is False
+    assert out.plan.fused is False
+    assert out.plan.fused_requested is True
+
+
+def test_engine_result_carries_plan():
+    from repro.core.engine import run_batch
+
+    out = run_batch([_spec(steps=3)], backend="jax")
+    assert out.plan is not None
+    assert out.plan.fused is True
+    assert out.fused_used is out.plan.fused      # compat mirror
+    assert "ExecutionPlan[backend=jax" in out.plan.explain()
+
+
+# ---------------------------------------------------------------------------
+# layering: engineplan never imports the engines
+# ---------------------------------------------------------------------------
+
+
+def test_engineplan_import_ban():
+    pkg = (pathlib.Path(__file__).resolve().parents[1]
+           / "src" / "repro" / "core" / "engineplan")
+    banned = ("repro.core.engine", "repro.core.engine_jax")
+    for path in sorted(pkg.glob("*.py")):
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                mods = [node.module or ""]
+            for m in mods:
+                assert not any(m == b or m.startswith(b + ".")
+                               for b in banned), \
+                    f"{path.name} imports {m}: the plan layer sits " \
+                    f"below the engines"
