@@ -80,6 +80,7 @@ from repro.core.engineplan.plan import (
     AFFINE_ATTACKS,            # noqa: F401  (public: tests import it here)
     ExecutionPlan,             # noqa: F401  (public re-export)
     FusedFallbackWarning,      # noqa: F401  (public re-export)
+    PlanFallbackWarning,       # noqa: F401  (public re-export)
     device_schedulable,        # noqa: F401  (public re-export)
     resolve_plan,
     value_independent_control,
@@ -170,7 +171,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
                   kernel_impl: str | None = None,
                   chunk_trials: int | None = None,
                   mesh="auto", fused: bool | None = None,
-                  stream_dtype: str = "f32") -> BatchResult:
+                  stream_dtype: str = "f32",
+                  data_plane: str | None = None) -> BatchResult:
     """Run B protocol trials with the jitted on-device data plane.
 
     schedule: "auto" | "vector" | "proxy" | "oracle" (host control
@@ -200,6 +202,20 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         arithmetic and accumulators stay f32, the iterate stays f32).
         bf16 trades the 1e-4 value-parity contract for bf16-rounded
         residuals; control quantities are unaffected (host schedule).
+    data_plane: None | "gram" | "stream" — the scan's domain.  "gram"
+        precomputes the Gram factors once (``ops.gram_factors``: G =
+        R R^T, the per-step sketch tables) and scans (B, I) residual
+        coefficients instead of the (B, d) iterate — NO d-sized work
+        per step; d is touched once before the scan and once after
+        (the W_T contraction).  ``None`` (default) auto-engages gram
+        on eligible host-control shared-problem batches once d >=
+        ``planlib.GRAM_MIN_D_RATIO`` * I; an explicit ``"gram"``
+        waives the size/control auto-gates (demotion on hard
+        ineligibility warns ``PlanFallbackWarning``).  Detection
+        symbols use the same precomputed sketch tables with identical
+        arithmetic, so detection verdicts match the stream plane
+        bit-for-bit; iterates/losses match at the documented f32
+        tolerances.
     chunk_trials: trials per device pass (default: memory-sized; only
         filter trials materialize a (chunk, n, d) gradient stack).
         Rounded up to a multiple of the mesh size; the last chunk is
@@ -259,7 +275,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         out.detect_flags = np.zeros((0, B), bool)
         out.plan = resolve_plan(
             specs, schedule=schedule, fused=fused,
-            stream_dtype=stream_dtype, kernel_impl=kernel_impl)
+            stream_dtype=stream_dtype, kernel_impl=kernel_impl,
+            data_plane=data_plane)
         out.fused_used = False
         if device_mode:
             trace = dict(q=np.zeros((0, B), np.float32),
@@ -295,9 +312,11 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     plan = resolve_plan(specs, schedule=schedule, fused=fused,
                         n_devices=ndev, chunk_trials=chunk_trials,
                         stream_dtype=stream_dtype,
-                        kernel_impl=kernel_impl, n_max=n_max)
+                        kernel_impl=kernel_impl, n_max=n_max,
+                        data_plane=data_plane)
     planlib.warn_on_fallback(plan)
     use_fused = plan.fused
+    use_gram = plan.data_plane == "gram"
     shared = plan.shared_problem
     has_filter = plan.has_filter
     has_bias = plan.has_bias
@@ -418,6 +437,37 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             rows_f,
             dtype=jnp.bfloat16 if stream_dtype == "bf16" else jnp.float32)
         common = {"keys": jnp.asarray(keys_t)}
+    elif use_gram:
+        # ONE streaming precompute pass replaces both the hoisted
+        # per-step pre-sketch AND all in-scan d-traffic: G = R R^T plus
+        # every step's sketch table (S0 = W0 R^T is identically zero —
+        # chunks start from W0 = 0, so the pipeline stages the zero
+        # carry directly).  Gram plans are shared-problem by
+        # construction, so rows_np is the single (n_data + 2, d)
+        # extended matrix.
+        rows_dev = jnp.asarray(rows_np)
+        _, _, sk_rows = ops.gram_factors(rows_dev, None, keys_t,
+                                         impl=kernel_impl)
+        # form G itself on the host with f64 chunk accumulation: each G
+        # entry is a length-d dot whose plain f32 accumulation error in
+        # the device dot grows ~sqrt(d)*eps (~1e-4 relative at d = 2^20)
+        # — and G feeds EVERY step's residual, so that error alone would
+        # blow the 1e-4 value contract.  f32 sgemm per 64K-column chunk
+        # (numpy's blocked sgemm keeps within-chunk error ~1e-7) with the
+        # cross-chunk sum carried in f64 costs ~0.1s once, amortized
+        # across all T steps.
+        G64 = np.zeros((rows_np.shape[0],) * 2, np.float64)
+        for lo in range(0, d, 1 << 16):
+            blk = rows_np[:, lo:lo + (1 << 16)]
+            G64 += (blk @ blk.T).astype(np.float64)
+        G_dev = jnp.asarray(G64.astype(np.float32))
+        common = {
+            "SA": sk_rows[:, :n_data],
+            "sk_one": sk_rows[:, n_data],
+            "sk_noise": sk_rows[:, n_data + 1],
+        }
+        if device_mode:
+            common["tix"] = jnp.arange(T, dtype=jnp.int32)
     else:
         rows_dev = jnp.asarray(rows_np)
         sk_rows = jnp.stack([
@@ -438,18 +488,23 @@ def run_batch_jax(specs, *, schedule: str = "auto",
     #    chunk-invariant operands ----------------------------------------
     if mesh is None:
         scan_fn = functools.partial(
-            jitted_step_core, fused=use_fused, control=plan.control,
-            shared=shared, has_filter=has_filter, has_bias=has_bias,
-            impl=kernel_impl)
+            jitted_step_core, fused=use_fused, gram=use_gram,
+            control=plan.control, shared=shared, has_filter=has_filter,
+            has_bias=has_bias, impl=kernel_impl)
         # non-shared problems upload per-chunk slices in the pipeline —
         # a full (B, n_data, d) upfront copy would defeat the chunk
         # memory bound (the fused path reads A only through the
         # extended rows matrix)
-        A_dev = (rows_dev if use_fused else
-                 jnp.asarray(A_np) if shared else None)
+        if use_fused:
+            A_dev = rows_dev
+        elif use_gram:
+            A_dev = {"rows": rows_dev, "G": G_dev}
+        else:
+            A_dev = jnp.asarray(A_np) if shared else None
         y_dev = jnp.asarray(y_np) if shared else None
         com_dev = common
-        noise_dev = None if use_fused else jnp.asarray(noisevec)
+        noise_dev = (None if (use_fused or use_gram)
+                     else jnp.asarray(noisevec))
         in_specs = None
     else:
         stat_sig = tuple((k, v.ndim) for k, v in sorted(stat_np.items()))
@@ -467,11 +522,13 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         if use_fused:
             rows_dev = put(rows_dev, in_specs[0])   # replicate once
             A_dev = rows_dev
+        elif use_gram:
+            A_dev = put({"rows": rows_dev, "G": G_dev}, in_specs[0])
         else:
             A_dev = put(A_np, in_specs[0]) if shared else None
         y_dev = put(y_np, in_specs[1]) if shared else None
         com_dev = put(common, in_specs[6])
-        noise_dev = (None if use_fused else
+        noise_dev = (None if (use_fused or use_gram) else
                      put(noisevec, in_specs[7]))
 
     # -- async chunk pipeline (depth 1; see engineplan.pipeline) ----------

@@ -48,10 +48,14 @@ def run_chunks(scan_fn, plan, *, B: int, T: int, d: int, d_run: int,
     ``extras`` is the device control plane's decision-trace dict
     (q/check/faulty2) or ``None`` under a host schedule."""
     fused = plan.fused
+    gram = plan.data_plane == "gram"
+    coeff = fused or gram        # coefficient-plane paths stage cw0
     device_mode = plan.control == "device"
     shared = plan.shared_problem
     ndev = plan.n_devices
     chunk_trials = plan.chunk_trials
+    Ie = (A_dev["rows"].shape[0] if gram
+          else (A_dev.shape[0] if fused else 0))
 
     if mesh is not None:
         from jax.sharding import NamedSharding
@@ -82,11 +86,12 @@ def run_chunks(scan_fn, plan, *, B: int, T: int, d: int, d_run: int,
             for k, v in xs_np.items()}
         W0 = np.zeros((bs + pad, d_run), np.float32)
         # fused: the pending-coefficient carry starts at zero (no update
-        # to apply on the first kernel call: the pipelined prologue)
-        cw0 = (np.zeros((bs + pad, A_dev.shape[0]), np.float32)
-               if fused else None)
-        pid_c = None if fused else pad_rows(pid_np[lo:hi], 0, pad)
-        if fused or shared:
+        # to apply on the first kernel call: the pipelined prologue);
+        # gram: the slot is S0 = W0 @ rows^T, identically zero because
+        # every chunk starts from W0 = 0
+        cw0 = np.zeros((bs + pad, Ie), np.float32) if coeff else None
+        pid_c = None if coeff else pad_rows(pid_np[lo:hi], 0, pad)
+        if coeff or shared:
             A_c, y_c = A_dev, y_dev
         else:
             A_c = dev(pad_rows(A_np[lo:hi], 0, pad), 0)

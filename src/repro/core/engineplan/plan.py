@@ -62,10 +62,27 @@ STREAM_DTYPES = ("f32", "bf16")
 CHUNK_ELEMS = 1 << 27
 
 
-class FusedFallbackWarning(UserWarning):
-    """``fused=True`` was requested but the plan demoted to the unfused
-    scan; the message (and ``BatchResult.plan.fallback_reason``) says
-    why.  Filter with ``warnings.filterwarnings`` by this category."""
+# auto-gate for the gram data plane: carrying (B, Ie) coefficients only
+# pays off once the iterate is comfortably larger than the coefficient
+# row — below this ratio the post-scan contraction plus the precompute
+# pass cost as much as the stream scan they replace
+GRAM_MIN_D_RATIO = 4
+
+
+class PlanFallbackWarning(UserWarning):
+    """A requested execution path was demoted by the plan's eligibility
+    gates; the message (and the matching ``ExecutionPlan`` reason field)
+    says why.  Filter with ``warnings.filterwarnings`` by this category
+    to catch every demotion class (fused, data_plane, ...)."""
+
+
+class FusedFallbackWarning(PlanFallbackWarning):
+    """Deprecated alias kept for the pre-data_plane engine-specific
+    naming: ``fused=True`` demotions are still *emitted* under this
+    subclass, so existing ``warnings.filterwarnings`` /
+    ``pytest.warns(FusedFallbackWarning)`` filters keep matching; new
+    code should catch :class:`PlanFallbackWarning`, which also covers
+    ``data_plane="gram"`` demotions."""
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +274,9 @@ class ExecutionPlan:
     kernel_impl: str | None      # resolved batched-kernel dispatch
     n_trials: int                # batch size B
     steps: int                   # scan length T (max steps over specs)
+    data_plane: str = "stream"   # "gram" | "stream" (the scan's domain)
+    data_plane_requested: str | None = None  # explicit; None = auto
+    data_plane_reason: str = ""  # why gram engaged / why it could not
 
     def explain(self) -> str:
         """Human-readable account of which path was picked and why."""
@@ -279,6 +299,12 @@ class ExecutionPlan:
             req = ("requested but demoted"
                    if self.fused_requested else "auto-off")
             fused_line = f"OFF ({req}) — {self.fallback_reason}"
+        if self.data_plane == "gram":
+            data_line = f"gram — {self.data_plane_reason}"
+        elif self.data_plane_reason:
+            data_line = f"stream — not gram: {self.data_plane_reason}"
+        else:
+            data_line = "stream"
         if self.sharded:
             shard_line = (f"shard_map over a {self.n_devices}-device "
                           f"(\"trials\",) mesh")
@@ -289,6 +315,7 @@ class ExecutionPlan:
             f"T={self.steps}]",
             f"  schedule : {self.schedule_mode} ({self.control} control "
             f"plane) — {sched_why}",
+            f"  data     : {data_line}",
             f"  fused    : {fused_line}",
             f"  sharding : {shard_line}, chunk={self.chunk_trials} "
             f"trials/pass",
@@ -305,7 +332,8 @@ def resolve_plan(specs, *, schedule: str = "auto",
                  chunk_trials: int | None = None,
                  stream_dtype: str = "f32",
                  kernel_impl: str | None = None,
-                 n_max: int | None = None) -> ExecutionPlan:
+                 n_max: int | None = None,
+                 data_plane: str | None = None) -> ExecutionPlan:
     """Resolve one batch's execution plan.  Pure: specs + knobs in,
     :class:`ExecutionPlan` out — no devices touched, so path selection
     is unit-testable for every spec class.
@@ -316,10 +344,27 @@ def resolve_plan(specs, *, schedule: str = "auto",
     ``n_devices``: mesh size, or None for the single-device jit path.
     ``n_max``: worker-axis width used for filter-chunk sizing; defaults
     to ``max(s.n)``.
+    ``data_plane``: None = auto (gram whenever eligible AND d is large
+    enough to pay for the precompute), "gram" = explicit request (size
+    and control-plane auto-gates waived; hard eligibility still applies
+    and demotion warns with :class:`PlanFallbackWarning`), "stream" =
+    the classic (B, d)-carry scan.  ``data_plane="gram"`` conflicts
+    with ``fused=True`` — the megakernel IS the stream plane's fast
+    path and the gram plane replaces the stream entirely.
     """
     specs = list(specs)
     if not specs:
         raise ValueError("resolve_plan needs at least one TrialSpec")
+    if data_plane not in (None, "stream", "gram"):
+        raise ValueError(
+            f"unknown data_plane {data_plane!r}; allowed values: "
+            f"'gram', 'stream' (or None for the auto choice)")
+    if data_plane == "gram" and fused is True:
+        raise ValueError(
+            'data_plane="gram" conflicts with fused=True: the fused '
+            "megakernel is the stream plane's fast path and the gram "
+            "plane replaces the stream scan entirely — request one or "
+            "the other")
     validate_stream_dtype(stream_dtype)
     validate_specs(specs)
     mode = resolve_schedule_mode(specs, schedule)
@@ -338,6 +383,57 @@ def resolve_plan(specs, *, schedule: str = "auto",
     has_bias = any(AFFINE_ATTACKS[s.attack][1] != 0.0
                    or AFFINE_ATTACKS[s.attack][2] != 0.0 for s in specs)
 
+    # gram data-plane gate: the scan can carry (B, Ie) residual
+    # coefficients instead of the (B, d) iterate exactly when the whole
+    # update is one shared contraction — shared problem, affine attacks
+    # only, no gradient-filter baselines.  Auto additionally requires
+    # host control (the device plane's q*/check coins read the loss,
+    # and the gram-domain loss rounds differently in f32 — explicit
+    # data_plane="gram" accepts that documented sliver), an unset
+    # ``fused`` knob (an explicit fused choice pins the stream plane),
+    # and d large enough to amortize the precompute.
+    Ie = specs[0].n_data + 2
+    auto_plane = data_plane is None
+    use_gram = False
+    if data_plane == "stream":
+        gram_reason = 'data_plane="stream" requested'
+    elif steps == 0:
+        gram_reason = "all trials have steps == 0: nothing to scan"
+    elif not shared:
+        n_prob = len({(s.problem_seed, s.n_data, s.d) for s in specs})
+        gram_reason = (
+            f"trials span {n_prob} distinct problems; the gram factors "
+            f"G = R R^T are per-problem, so the coefficient recurrence "
+            f"needs ONE shared extended matrix")
+    elif has_filter:
+        flags = [FILTER_CODES.get(filter_name(s), -1) >= 0 for s in specs]
+        gram_reason = (
+            f"filter baseline trials ({spec_display_names(specs, flags)}) "
+            f"materialize the (B, n, d) gradient stack every step — "
+            f"there is no coefficient-only form")
+    elif auto_plane and fused is not None:
+        gram_reason = (
+            f"explicit fused={fused} pins the stream data plane (the "
+            f"fused megakernel and its unfused parity oracle)")
+    elif auto_plane and control == "device":
+        gram_reason = (
+            'auto keeps the stream plane under schedule="device": the '
+            "q*/check coins read the loss, and the gram-domain loss "
+            'rounds differently in f32 — pass data_plane="gram" to '
+            "accept the documented coin-flip sliver")
+    elif auto_plane and d < GRAM_MIN_D_RATIO * Ie:
+        gram_reason = (
+            f"d={d} < {GRAM_MIN_D_RATIO}*I={GRAM_MIN_D_RATIO * Ie}: the "
+            f"(B, I) coefficient carry would not beat the (B, d) "
+            f"iterate, so the stream plane wins")
+    else:
+        use_gram = True
+        gram_reason = (
+            f"shared problem, affine attacks, no filter baselines, "
+            f"{control} control — the scan carries (B, I={Ie}) "
+            f"coefficients; d={d} is touched once before the scan "
+            f"(gram precompute) and once after (W_T contraction)")
+
     # fused scope gate: shared-problem, non-filter, host-schedule — the
     # production-d hot path.  Everything else takes the unfused scan
     # (which doubles as the fused path's parity oracle at fused=False),
@@ -345,7 +441,12 @@ def resolve_plan(specs, *, schedule: str = "auto",
     fallback_reason = None
     use_fused = False
     if fused is not False:
-        if steps == 0:
+        if use_gram:
+            fallback_reason = (
+                "superseded by the gram data plane: the scan runs in "
+                "coefficient space (resid = S0 - C_t G), so there is no "
+                "d-sized stream left to fuse")
+        elif steps == 0:
             fallback_reason = ("all trials have steps == 0: nothing to "
                                "scan")
         elif control == "device":
@@ -391,14 +492,24 @@ def resolve_plan(specs, *, schedule: str = "auto",
         sharded=n_devices is not None, n_devices=ndev,
         chunk_trials=chunk, stream_dtype=stream_dtype,
         kernel_impl=kernel_impl, n_trials=B, steps=steps,
+        data_plane="gram" if use_gram else "stream",
+        data_plane_requested=data_plane, data_plane_reason=gram_reason,
     )
 
 
 def warn_on_fallback(plan: ExecutionPlan, stacklevel: int = 3) -> None:
-    """Emit :class:`FusedFallbackWarning` when an explicit ``fused=True``
-    request was demoted to the unfused scan (the PR-7 debugging
-    dead-end: the fallback used to be silent).  Zero-step batches never
-    warn — there is no scan to fuse."""
+    """Emit a :class:`PlanFallbackWarning` when an explicitly requested
+    path was demoted (the PR-7 debugging dead-end: the fallback used to
+    be silent).  Fused demotions come out as the
+    :class:`FusedFallbackWarning` subclass for back-compat filters.
+    Zero-step batches never warn — there is no scan at all."""
+    if plan.data_plane_requested == "gram" \
+            and plan.data_plane != "gram" and plan.steps > 0:
+        warnings.warn(
+            f'data_plane="gram" requested but the plan fell back to the '
+            f"stream scan: {plan.data_plane_reason} "
+            f"(see BatchResult.plan.explain())",
+            PlanFallbackWarning, stacklevel=stacklevel)
     if plan.fused_requested is True and not plan.fused and plan.steps > 0:
         warnings.warn(
             f"fused=True requested but the plan fell back to the "

@@ -24,7 +24,7 @@ from repro.core.engineplan.stepcore import step_core
 
 
 @functools.lru_cache(maxsize=32)
-def _build(mesh, fused: bool, control: str, shared: bool,
+def _build(mesh, fused: bool, gram: bool, control: str, shared: bool,
            has_filter: bool, has_bias: bool, impl: str | None,
            stat_sig: tuple, xs_sig: tuple | None, com_sig: tuple,
            a_ndim: int):
@@ -37,19 +37,30 @@ def _build(mesh, fused: bool, control: str, shared: bool,
     cache) instead of recompiling."""
     from repro.sharding import shard_map, trial_partition_spec as ts
 
+    coeff = fused or gram        # coefficient-plane carry: cw0 shards
+    if gram:
+        # the gram factors replicate like the fused rows matrix: every
+        # device scans its trial shard against the same (Ie, Ie) G and
+        # contracts against the same (Ie, d) rows after the scan
+        a_spec = {"rows": ts(2, None), "G": ts(2, None)}
+        y_spec = ts(1, None)
+    elif fused:
+        a_spec, y_spec = ts(2, None), ts(1, None)
+    else:
+        # A: the shared data matrix replicates; per-trial stacks shard
+        a_spec = ts(a_ndim, None if shared else 0)
+        y_spec = ts(a_ndim - 1, None if shared else 0)
     in_specs = (
-        # A: the shared data matrix replicates; per-trial stacks shard;
-        # the fused path's extended rows matrix always replicates
-        ts(2, None) if fused else ts(a_ndim, None if shared else 0),
-        ts(1, None) if fused else ts(a_ndim - 1, None if shared else 0),
+        a_spec,
+        y_spec,
         ts(2, 0),                                          # W0
-        ts(2, 0) if fused else None,                       # cw0
+        ts(2, 0) if coeff else None,                       # cw0
         {k: ts(nd, 0) for k, nd in stat_sig},              # stat
         None if xs_sig is None else
         {k: ts(nd, 1) for k, nd in xs_sig},                # xs (T, B, ..)
         {k: ts(nd, None) for k, nd in com_sig},            # replicated
-        None if fused else ts(1, None),                    # noisevec
-        None if fused else ts(1, 0),                       # pid
+        None if coeff else ts(1, None),                    # noisevec
+        None if coeff else ts(1, 0),                       # pid
     )
     if control == "device":
         # (W, losses, q, check, det, faulty2): the carry's protocol
@@ -58,9 +69,10 @@ def _build(mesh, fused: bool, control: str, shared: bool,
                      ts(3, 1))
     else:
         out_specs = (ts(2, 0), ts(2, 1), ts(2, 1))
-    body = functools.partial(step_core, fused=fused, control=control,
-                             shared=shared, has_filter=has_filter,
-                             has_bias=has_bias, impl=impl)
+    body = functools.partial(step_core, fused=fused, gram=gram,
+                             control=control, shared=shared,
+                             has_filter=has_filter, has_bias=has_bias,
+                             impl=impl)
     fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
                    axis_names={"trials"}, check_vma=False)
     return jax.jit(fn, donate_argnums=(2, 3, 4, 5)), in_specs
@@ -73,6 +85,7 @@ def shard_wrap(plan, mesh, *, stat_sig: tuple, xs_sig: tuple | None,
     Returns ``(fn, in_specs)`` — ``in_specs`` doubles as the
     device_put target layout for the chunk pipeline.  Only the plan's
     path statics key the cache; see :func:`_build`."""
-    return _build(mesh, plan.fused, plan.control, plan.shared_problem,
+    return _build(mesh, plan.fused, plan.data_plane == "gram",
+                  plan.control, plan.shared_problem,
                   plan.has_filter, plan.has_bias, plan.kernel_impl,
                   stat_sig, xs_sig, com_sig, a_ndim)

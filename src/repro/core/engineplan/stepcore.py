@@ -13,20 +13,32 @@ replaces — which is what keeps the golden control traces, the
 differential suite and the parity tests bit-identical across the
 refactor.
 
+The ``gram: bool`` static selects the gram-domain data plane on top of
+either control plane: the scan carry is residual *coefficients* only
+(``C_t`` with ``W_t = W_0 - C_t @ rows``), residual symbols come from
+the precomputed Gram factors as ``S_0 - C_t @ G`` (``ops.gram_factors``),
+and ``d`` is touched exactly once after the scan — the post-scan
+contraction materializing ``W_T``.  Per-step cost is O(B·I²) with no
+(B, d) traffic at all.
+
 Unified signature (unused slots are ``None``, an empty pytree under
 jit/shard_map, so one argument layout serves every path)::
 
     step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
-              fused, control, shared, has_filter, has_bias, impl)
+              fused, control, shared, has_filter, has_bias, impl,
+              gram=False)
 
 =====  ======================  =========================================
-slot   host unfused            fused / device
+slot   host unfused            fused / device / gram
 =====  ======================  =========================================
 A      (n_data, d) or          fused: (Ie_pad, d_pad) extended rows
-       (B, n_data, d) matrix   device: as host unfused
+       (B, n_data, d) matrix   gram: {"rows": (Ie, d), "G": (Ie, Ie)}
+                               device: as host unfused
 cw0    None                    fused: (B, Ie_pad) pending-coeff carry
+                               gram: (B, Ie) starting symbols S_0
 xs     (T, B, ...) schedule    device: None (decisions made in-scan)
-com    per-step replicated     fused: {"keys"}; device: adds "tix"
+com    per-step replicated     fused: {"keys"}; gram: per-step sketch
+                               tables; device: adds "tix"
 =====  ======================  =========================================
 
 Outputs: host control -> ``(W, losses, det)``; device control ->
@@ -121,7 +133,7 @@ def masked_mean(g, act):
 
 def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
               fused: bool, control: str, shared: bool, has_filter: bool,
-              has_bias: bool, impl: str | None):
+              has_bias: bool, impl: str | None, gram: bool = False):
     """The protocol loop: scan the schedule (or the fused-in control
     plane) over iterations, configured by jit-static flags.
 
@@ -142,6 +154,16 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
     n_data = y.shape[-1]
     B = W0.shape[0]
     lr, alpha, beta, nu = stat["lr"], stat["alpha"], stat["beta"], stat["nu"]
+    # "coefficient plane": the fused and gram paths both carry per-row
+    # residual coefficients instead of (B, d) update values, so they
+    # share the tuple-valued agg/vote epilogue below
+    coeff = fused or gram
+    if gram:
+        Ie = A["rows"].shape[0]
+        Gn = A["G"][:, :n_data]          # symbol columns the scan reads
+        S0n = cw0[:, :n_data]
+    else:
+        Ie = A.shape[0] if fused else 0  # extended-rows count
 
     # ---- shared step epilogue: the closures the three old cores
     # duplicated, built once and parameterized by the statics ------------
@@ -151,22 +173,24 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
             return jnp.einsum("bi,id->bd", cr, A)
         return ops.batched_coded_encode(cr[:, None, :], A, impl=impl)[:, 0]
 
-    def agg(coeff, tam, mask, cr_base):
+    def agg(agg_coeff, tam, mask, cr_base):
         """(B, n) aggregation coefficients -> the update, with the
         affine attacks folded in: sum_w coeff_w * attack_w(g_w).
-        Host/device control returns the (B, d) update value; the fused
-        path returns the residual-coefficient row (B, I) plus its two
-        bias coefficients (the ones-row / noise-row columns of the
-        extended contraction) for the NEXT kernel pass to apply."""
-        aeff = jnp.where(tam, alpha[:, None], 1.0) * coeff
+        Host/device control returns the (B, d) update value; the
+        coefficient plane (fused or gram) returns the residual-
+        coefficient row (B, I) plus its two bias coefficients (the
+        ones-row / noise-row columns of the extended contraction) for
+        the next contraction — the fused kernel's, or the gram carry's
+        — to apply."""
+        aeff = jnp.where(tam, alpha[:, None], 1.0) * agg_coeff
         row = jnp.einsum("bw,bwi->bi", aeff, mask) * cr_base
-        if fused:
-            tw = coeff * tam
+        if coeff:
+            tw = agg_coeff * tam
             return row, (tw * beta[:, None]).sum(axis=1), \
                 (tw * nu[:, None]).sum(axis=1)
         upd = contract(row)
         if has_bias:
-            tw = coeff * tam
+            tw = agg_coeff * tam
             upd = upd + (tw * beta[:, None]).sum(axis=1)[:, None] \
                 + (tw * nu[:, None]).sum(axis=1)[:, None] * noisevec[None]
         return upd
@@ -175,21 +199,42 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
         """Per-worker detection symbols: sketch linearity turns the
         worker's gradient sketch into its coefficient row times the
         pre-sketched data rows; attacks act affinely on symbols too.
-        ``SA_b`` is (I, k) on the fused path (the megakernel's in-pass
-        sketch) and (B, I, k) otherwise (per-problem tables gathered by
-        ``pid``)."""
+        ``SA_b`` is (I, k) on the coefficient plane (the megakernel's
+        in-pass sketch / the gram precompute's per-step table) and
+        (B, I, k) otherwise (per-problem tables gathered by ``pid``)."""
         C = mask * cr_base[:, None, :]                       # (B, n, I)
-        if fused:
+        if coeff:
             skw = jnp.einsum("bwi,ik->bwk", C, SA_b)
         else:
             skw = jnp.einsum("bwi,bik->bwk", C, SA_b)
-        if fused or has_bias:
+        if coeff or has_bias:
             add = beta[:, None, None] * sk_one[None, None] \
                 + nu[:, None, None] * sk_noise[None, None]
         else:
             add = 0.0
         return jnp.where(tam[:, :, None],
                          alpha[:, None, None] * skw + add, skw)
+
+    def acc(u, v):                     # update accumulation, either plane
+        if coeff:
+            return (u[0] + v[0], u[1] + v[1], u[2] + v[2])
+        return u + v
+
+    def upd_zeros():                   # the additive identity of acc()
+        if coeff:
+            return (jnp.zeros((B, n_data)), jnp.zeros(B), jnp.zeros(B))
+        return jnp.zeros_like(W0)
+
+    def fold_coeff(upd, live):
+        """Coefficient-plane epilogue: (row, b1, b2) -> the (B, Ie)
+        pending-coefficient increment with lr and the live mask folded
+        in (a dead trial's row is exactly zero, so its iterate — fused
+        in-place or gram post-scan — stays bitwise intact)."""
+        row_u, b1, b2 = upd
+        scale = jnp.where(live, lr, 0.0)
+        return jnp.concatenate(
+            [row_u, b1[:, None], b2[:, None],
+             jnp.zeros((B, Ie - n_data - 2))], axis=1) * scale[:, None]
 
     # ---- device control plane: decisions made inside the scan ----------
 
@@ -201,14 +246,22 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
         zero_u = jnp.zeros((B,), jnp.uint32)
 
         def device_step(carry, c):
+            # carry[0] is the (B, d) iterate W — or, on the gram plane,
+            # the (B, Ie) coefficient matrix C with W = W0 - C @ rows
             W, active, kappa = carry
             t = c["tix"]
             t32 = t.astype(jnp.uint32)
             live = t < stat["steps"]                          # (B,)
-            SA_b = c["SA"][pid]
+            if gram:
+                SA_b = c["SA"]
+            else:
+                SA_b = c["SA"][pid]
             sk_one, sk_noise = c["sk_one"], c["sk_noise"]
 
-            if shared:
+            if gram:
+                resid = S0n - jnp.dot(
+                    W, Gn, preferred_element_type=jnp.float32) - y[None, :]
+            elif shared:
                 resid = jnp.einsum("id,bd->bi", A, W) - y[None, :]
             else:
                 resid = jnp.einsum("bid,bd->bi", A, W) - y
@@ -289,26 +342,32 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
 
             upd2, faulty2 = jax.lax.cond(
                 det.any(), identify,
-                lambda _: (jnp.zeros_like(W0),
-                           jnp.zeros((B, n_max), bool)),
+                lambda _: (upd_zeros(), jnp.zeros((B, n_max), bool)),
                 None)
-            upd = upd + upd2
+            upd = acc(upd, upd2)
 
-            W = jnp.where(live[:, None], W - lr[:, None] * upd, W)
+            if gram:
+                W = W + fold_coeff(upd, live)
+            else:
+                W = jnp.where(live[:, None], W - lr[:, None] * upd, W)
             active = active & ~faulty2
             kappa = kappa + faulty2.sum(axis=1).astype(kappa.dtype)
             return (W, active, kappa), (loss, jnp.where(live, q_t, 0.0),
                                         check, det, faulty2)
 
-        init = (W0, stat["act0"], jnp.zeros(B, jnp.int32))
+        init = (jnp.zeros_like(cw0) if gram else W0,
+                stat["act0"], jnp.zeros(B, jnp.int32))
         (W, _, _), ys = jax.lax.scan(device_step, init, com)
+        if gram:
+            # the only d-sized work of the whole run: W_T = W0 - C_T @ R
+            W = W0 - jnp.dot(W, A["rows"].astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
         losses, q_tr, check_tr, det_tr, faulty2_tr = ys
         return W, losses, q_tr, check_tr, det_tr, faulty2_tr
 
     # ---- host control plane: scan the precomputed schedule -------------
 
     fcode, farr = stat["fcode"], stat["farr"]
-    Ie = A.shape[0] if fused else 0    # extended-rows count (fused only)
 
     def host_step(carry, xc):
         if fused:
@@ -320,6 +379,15 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
             resid = resid_e[:, :n_data] - y[None, :]
             SA_b = sk[:n_data]
             sk_one, sk_noise = sk[n_data], sk[n_data + 1]
+        elif gram:
+            # NO d-sized pass at all: symbols of W_t = W0 - C_t @ rows
+            # come from the precomputed Gram factors, O(B·I²)
+            W = carry                                        # C_t (B, Ie)
+            x, c = xc
+            resid = S0n - jnp.dot(
+                W, Gn, preferred_element_type=jnp.float32) - y[None, :]
+            SA_b = c["SA"]
+            sk_one, sk_noise = c["sk_one"], c["sk_noise"]
         else:
             W = carry
             x, c = xc
@@ -360,18 +428,8 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
                                   wc / jnp.maximum(m, 1)[:, None], 0.0)
                 return agg(coeff, tam, mask_, cr_)
 
-            if fused:
-                zeros = (jnp.zeros((B, n_data)), jnp.zeros(B),
-                         jnp.zeros(B))
-            else:
-                zeros = jnp.zeros_like(W0)
-            return jax.lax.cond(gate.any(), compute, lambda _: zeros,
-                                None)
-
-        def acc(u, v):
-            if fused:
-                return (u[0] + v[0], u[1] + v[1], u[2] + v[2])
-            return u + v
+            return jax.lax.cond(gate.any(), compute,
+                                lambda _: upd_zeros(), None)
 
         upd = acc(upd, vote_part(x["shard1"], x["group1"], x["m1"],
                                  x["tam1"], x["vote1"], skt=skt1,
@@ -398,15 +456,9 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
             upd = jnp.where((fcode >= 0)[:, None], fupd, upd)
 
         if fused:
-            # fold lr and the live mask in: a dead trial's pending row
-            # is exactly zero, so the kernel leaves its iterate bitwise
-            # intact
-            row_u, b1, b2 = upd
-            scale = jnp.where(x["live"], lr, 0.0)
-            cw = jnp.concatenate(
-                [row_u, b1[:, None], b2[:, None],
-                 jnp.zeros((B, Ie - n_data - 2))], axis=1) * scale[:, None]
-            return (W, cw), (loss, det)
+            return (W, fold_coeff(upd, x["live"])), (loss, det)
+        if gram:
+            return W + fold_coeff(upd, x["live"]), (loss, det)
         W = jnp.where(x["live"][:, None], W - lr[:, None] * upd, W)
         return W, (loss, det)
 
@@ -416,6 +468,13 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
         # the last step's update is still pending: one final contraction
         W = W - jnp.dot(cw, A.astype(jnp.float32),
                         preferred_element_type=jnp.float32)
+        return W, losses, det
+    if gram:
+        C, (losses, det) = jax.lax.scan(host_step, jnp.zeros_like(cw0),
+                                        (xs, com))
+        # the only d-sized work of the whole run: W_T = W0 - C_T @ R
+        W = W0 - jnp.dot(C, A["rows"].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
         return W, losses, det
     W, (losses, det) = jax.lax.scan(host_step, W0, (xs, com))
     return W, losses, det
@@ -428,6 +487,6 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
 jitted_step_core = functools.partial(
     jax.jit,
     static_argnames=("fused", "control", "shared", "has_filter",
-                     "has_bias", "impl"),
+                     "has_bias", "impl", "gram"),
     donate_argnames=("W0", "cw0", "stat", "xs"),
 )(step_core)

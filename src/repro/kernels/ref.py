@@ -148,6 +148,32 @@ def fused_step_ref(rows: jnp.ndarray, W: jnp.ndarray, cw: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Gram-plane precompute — see repro.kernels.gram
+# ---------------------------------------------------------------------------
+
+def gram_factors_ref(rows: jnp.ndarray, W0: jnp.ndarray | None,
+                     keys, k: int = 256):
+    """Composed oracle for the gram precompute kernel: the three
+    quantities it accumulates, each expressed through the existing
+    single-op refs.
+
+    G = rows @ rows^T;  S0 = W0 @ rows^T;  SK[t] = per-row CountSketch
+    of the rows under keys[t].
+    """
+    rows32 = rows.astype(jnp.float32)
+    G = coded_encode_ref(rows32, rows32.T)
+    S0 = None if W0 is None else coded_encode_ref(W0, rows32.T)
+    keys = jnp.asarray(keys, jnp.uint32)
+    Ie = rows32.shape[0]
+    if keys.shape[0] == 0:
+        SK = jnp.zeros((0, Ie, k), jnp.float32)
+    else:
+        SK = jnp.stack([batched_sketch_ref(rows32, keys[t], k)
+                        for t in range(keys.shape[0])])
+    return G, S0, SK
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (causal / windowed), GQA — see repro.models.attention
 # ---------------------------------------------------------------------------
 

@@ -85,6 +85,23 @@ def main() -> None:
     flags_ok = sh.fused_used is True and un_f.fused_used is False
     print(f"RESULT fused_sharded_parity={same_f and flags_ok}")
 
+    # -- gram data plane across the mesh: coefficient-space scan with
+    #    the (B, Ie) carry sharded over trials and the gram factors
+    #    replicated; detection verdicts must stay bitwise equal to the
+    #    unfused sharded oracle (same precomputed sketch tables) --------
+    gr = run_batch(specs, backend="jax", mesh=mesh, data_plane="gram")
+    same_g = all(close(a, b) for a, b in zip(un_f, gr))
+    plane_ok = (gr.plan.data_plane == "gram"
+                and gr.fused_used is False
+                and bool(np.array_equal(gr.detect_flags, un_f.detect_flags)))
+    print(f"RESULT gram_sharded_parity={same_g and plane_ok}")
+
+    # gram through the chunked pipeline (chunk < B, padded remainder)
+    gr_ch = run_batch(specs, backend="jax", mesh=mesh, data_plane="gram",
+                      chunk_trials=9)
+    same_gch = all(close(a, b) for a, b in zip(gr, gr_ch))
+    print(f"RESULT gram_chunk_pipeline_parity={same_gch}")
+
     # -- chunked async pipeline: several chunks + a padded remainder ------
     ch = run_batch(specs, backend="jax", mesh=mesh, chunk_trials=9)
     same_ch = all(close(a, b) for a, b in zip(un, ch))

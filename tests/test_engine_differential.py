@@ -178,6 +178,31 @@ def _check_device_streams(specs):
     assert sorted(jxb.device_trace) == ["check", "detect", "faulty2", "q"]
 
 
+def _check_gram_plane(specs):
+    """numpy engine vs the jax gram data plane (coefficient-space scan).
+
+    The host batches are all shared-problem and affine, so the explicit
+    plane engages for every steps > 0 draw (the tiny-d pools sit below
+    the AUTO size gate, which an explicit request waives); steps == 0
+    draws exercise the silent demotion path instead.
+    """
+    import warnings
+
+    from repro.core.engineplan.plan import PlanFallbackWarning
+
+    npb = run_batch(specs)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanFallbackWarning)
+        jxb = run_batch(specs, backend="jax", data_plane="gram")
+    if max(s.steps for s in specs) == 0:
+        assert jxb.plan.data_plane == "stream"
+    else:
+        assert jxb.plan.data_plane == "gram"
+    for s, rn, rj in zip(specs, npb, jxb):
+        _assert_control_equal(s, rn, rj, q_exact=True)
+        _assert_floats_close(s, rn, rj)
+
+
 # ---------------------------------------------------------------------------
 # the tests — hypothesis-driven when available, seeded sweep otherwise
 # ---------------------------------------------------------------------------
@@ -195,6 +220,11 @@ if HAVE_HYPOTHESIS:
     def test_differential_device_streams(specs):
         _check_device_streams(specs)
 
+    @_SETTINGS
+    @given(specs=_batch_strategy(host=True))
+    def test_differential_gram_plane(specs):
+        _check_gram_plane(specs)
+
 else:
 
     @pytest.mark.parametrize("case_seed", range(_FALLBACK_CASES))
@@ -204,6 +234,10 @@ else:
     @pytest.mark.parametrize("case_seed", range(_FALLBACK_CASES))
     def test_differential_device_streams(case_seed):
         _check_device_streams(_fallback_batch(case_seed, host=False))
+
+    @pytest.mark.parametrize("case_seed", range(_FALLBACK_CASES))
+    def test_differential_gram_plane(case_seed):
+        _check_gram_plane(_fallback_batch(case_seed, host=True))
 
 
 # fixed regression corners that must hold in every environment,

@@ -18,6 +18,7 @@ import pytest
 from repro.core.engine import SCENARIOS, TrialSpec
 from repro.core.engineplan.plan import (
     FusedFallbackWarning,
+    PlanFallbackWarning,
     device_schedulable,
     resolve_plan,
     resolve_schedule_mode,
@@ -223,6 +224,108 @@ def test_engine_result_carries_plan():
     assert out.plan.fused is True
     assert out.fused_used is out.plan.fused      # compat mirror
     assert "ExecutionPlan[backend=jax" in out.plan.explain()
+
+
+# ---------------------------------------------------------------------------
+# gram data plane: auto gate, explicit request, demotion warning
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenarios_grid_stays_on_stream_plane(name):
+    # every committed scenario runs at the default tiny d=8 < 4*I, so
+    # the auto gate must leave the grid's paths exactly as they were
+    # before the gram plane existed
+    plan = resolve_plan(SCENARIOS[name].expand())
+    assert plan.data_plane == "stream"
+    assert plan.data_plane_requested is None
+    assert plan.data_plane_reason            # the "why not" is recorded
+
+
+def test_auto_gram_engages_at_large_d():
+    plan = resolve_plan([_spec(n_data=64, d=4096)])
+    assert plan.data_plane == "gram"
+    assert plan.fused is False
+    assert "superseded by the gram data plane" in plan.fallback_reason
+    text = plan.explain()
+    assert "gram — shared problem" in text
+    assert "I=66" in plan.data_plane_reason
+
+
+def test_auto_gram_size_gate_keeps_stream():
+    plan = resolve_plan([_spec(n_data=64, d=64)])
+    assert plan.data_plane == "stream"
+    assert "d=64 < 4*I=264" in plan.data_plane_reason
+    assert plan.fused is True                # the stream fast path stays
+
+
+def test_auto_gram_defers_to_explicit_fused():
+    plan = resolve_plan([_spec(n_data=64, d=4096)], fused=True)
+    assert plan.data_plane == "stream"
+    assert "pins the stream data plane" in plan.data_plane_reason
+    assert plan.fused is True
+
+
+def test_auto_gram_keeps_stream_under_device_control():
+    plan = resolve_plan([_spec(n_data=64, d=4096)], schedule="device")
+    assert plan.data_plane == "stream"
+    assert "coin-flip sliver" in plan.data_plane_reason
+
+
+def test_explicit_gram_waives_auto_gates():
+    # size gate (default d=8) and device control are auto-only gates
+    plan = resolve_plan([_spec()], data_plane="gram")
+    assert plan.data_plane == "gram"
+    plan = resolve_plan([_spec()], data_plane="gram", schedule="device")
+    assert (plan.data_plane, plan.control) == ("gram", "device")
+
+
+def test_explicit_gram_demotion_warns():
+    plan = resolve_plan([_spec(mode="filter:median")], data_plane="gram")
+    assert plan.data_plane == "stream"
+    assert "filter baseline" in plan.data_plane_reason
+    with pytest.warns(PlanFallbackWarning, match="filter baseline"):
+        warn_on_fallback(plan)
+    text = plan.explain()
+    assert "stream — not gram:" in text
+
+
+def test_explicit_gram_zero_steps_never_warns():
+    plan = resolve_plan([_spec(steps=0)], data_plane="gram")
+    assert plan.data_plane == "stream"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        warn_on_fallback(plan)
+
+
+def test_gram_with_fused_true_rejected():
+    with pytest.raises(ValueError, match="conflicts with fused=True"):
+        resolve_plan([_spec()], data_plane="gram", fused=True)
+
+
+def test_unknown_data_plane_rejected():
+    with pytest.raises(ValueError, match="unknown data_plane"):
+        resolve_plan([_spec()], data_plane="coefficients")
+
+
+def test_fused_warning_is_plan_fallback_subclass():
+    # deprecation shim: old filters catching FusedFallbackWarning keep
+    # matching fused demotions; new code catches PlanFallbackWarning
+    # and sees every demotion class
+    assert issubclass(FusedFallbackWarning, PlanFallbackWarning)
+    plan = resolve_plan([_spec(mode="filter:median")], fused=True)
+    with pytest.warns(PlanFallbackWarning, match="filter baseline"):
+        warn_on_fallback(plan)
+
+
+def test_engine_emits_plan_fallback_warning_on_gram_demotion():
+    from repro.core.engine import run_batch
+
+    specs = [dataclasses.replace(_spec(), steps=3, mode="filter:median")]
+    with pytest.warns(PlanFallbackWarning, match="filter baseline"):
+        out = run_batch(specs, backend="jax", data_plane="gram")
+    assert out.plan.data_plane == "stream"
+    assert out.plan.data_plane_requested == "gram"
 
 
 # ---------------------------------------------------------------------------

@@ -236,6 +236,82 @@ def test_fused_step_shape_validation():
 
 
 # ---------------------------------------------------------------------------
+# gram-plane precompute kernel vs the composed single-op oracles
+# ---------------------------------------------------------------------------
+
+
+def _gram_inputs(B, Ie, d, T, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    rows = jax.random.normal(ks[0], (Ie, d), jnp.float32)
+    W0 = jax.random.normal(ks[1], (B, d), jnp.float32)
+    keys = np.uint32(0x9E3779B9) * (np.arange(T, dtype=np.uint32) + 1)
+    return rows, W0, keys
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("B,Ie,d,T", [
+    (1, 3, 8, 1),          # B = 1 singleton batch, single key
+    (2, 10, 511, 3),       # d off the 512 block AND off the 256 lane
+    (3, 7, 513, 2),        # just past one block
+    (2, 8, 1024, 4),       # exact block multiple
+])
+def test_gram_factors_vs_composed_refs(impl, B, Ie, d, T):
+    rows, W0, keys = _gram_inputs(B, Ie, d, T, seed=B + Ie + d + T)
+    G_k, S0_k, SK_k = ops.gram_factors(rows, W0, keys, impl=impl,
+                                       interpret=True)
+    G_r, S0_r, SK_r = ref.gram_factors_ref(rows, W0, keys)
+    assert SK_k.shape == (T, Ie, 256)
+    np.testing.assert_allclose(G_k, G_r, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(S0_k, S0_r, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(SK_k, SK_r, rtol=2e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_gram_factors_no_w0_and_empty_keys(impl):
+    rows, W0, keys = _gram_inputs(2, 6, 700, 3, seed=6)
+    G_k, S0_k, _ = ops.gram_factors(rows, None, keys, impl=impl,
+                                    interpret=True)
+    assert S0_k is None
+    np.testing.assert_allclose(G_k, ref.gram_factors_ref(rows, None, keys)[0],
+                               rtol=1e-5, atol=1e-3)
+    G0, S00, SK0 = ops.gram_factors(rows, W0, np.zeros(0, np.uint32),
+                                    impl=impl, interpret=True)
+    assert SK0.shape == (0, 6, 256)
+    np.testing.assert_allclose(G0, G_k, rtol=1e-6, atol=1e-5)
+
+
+def test_gram_factors_key_chunking_matches_unchunked(monkeypatch):
+    """The pallas dispatch bounds the resident (Tc, Ie, k) sketch
+    accumulator by chunking the key axis; values must not depend on
+    where the chunk boundary lands."""
+    rows, W0, keys = _gram_inputs(3, 10, 1024, 5, seed=3)
+    full = ops.gram_factors(rows, W0, keys, impl="pallas", interpret=True)
+    monkeypatch.setattr(ops, "_GRAM_SK_VMEM", 16 * 256 * 4 * 2)  # 2 keys/call
+    chunked = ops.gram_factors(rows, W0, keys, impl="pallas",
+                               interpret=True)
+    for a, b in zip(full, chunked):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gram_factors_xla_tables_match_stream_plane():
+    """The gram plane's detection verdicts rest on the per-step sketch
+    tables matching the values the unfused scan pre-sketches.  The xla
+    dispatch computes all T tables as one bucketed einsum, which sums
+    each bucket in a different f32 order than the stream plane's
+    per-key reshape(-1, k).sum — so the match is tight-tolerance, not
+    bitwise (the ~1e-5 relative reassociation noise is orders of
+    magnitude below any detection margin; the engine-level tests assert
+    verdict equality end to end)."""
+    rows, _, keys = _gram_inputs(1, 9, 2049, 4, seed=9)
+    _, _, SK = ops.gram_factors(rows, None, keys, impl="xla")
+    for t, key in enumerate(keys):
+        np.testing.assert_allclose(
+            np.asarray(SK[t]),
+            np.asarray(ops.batched_sketch(rows, key, impl="xla")),
+            rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # impl dispatch: REPRO_KERNEL_IMPL / explicit impl validation
 # ---------------------------------------------------------------------------
 

@@ -84,6 +84,15 @@ def test_fused_sharded_parity(results):
 
 
 @pytest.mark.slow
+def test_gram_sharded_parity(results):
+    """The gram data plane across the 8-device trials mesh: values match
+    the unfused sharded oracle at the f32 tolerance, detection verdicts
+    bitwise, and the chunked pipeline agrees with the one-chunk run."""
+    assert results["gram_sharded_parity"] is True
+    assert results["gram_chunk_pipeline_parity"] is True
+
+
+@pytest.mark.slow
 def test_chunk_pipeline_and_padding(results):
     assert results["chunk_pipeline_parity"] is True
     assert results["small_batch_padding_parity"] is True
