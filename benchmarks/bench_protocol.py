@@ -47,7 +47,6 @@ REPRO_PROFILE=<dir> additionally wraps the warm timed runs in
 """
 from __future__ import annotations
 
-import contextlib
 import json
 import os
 import time
@@ -57,24 +56,9 @@ import numpy as np
 from repro.core import adaptive
 from repro.core.engine import ModeSpec, ScenarioMatrix, TrialSpec, run_batch
 from repro.core.simulation import run_protocol
+from repro.obs.trace import profile_trace
 
 F, N = 2, 8
-
-
-@contextlib.contextmanager
-def _profiled(label: str):
-    """Opt-in profiler hook: REPRO_PROFILE=<dir> wraps the enclosed
-    run_batch calls in a ``jax.profiler.trace`` so fused-vs-unfused HBM
-    traffic (and every kernel launch) is inspectable in TensorBoard /
-    Perfetto; unset, this is a no-op."""
-    prof_dir = os.environ.get("REPRO_PROFILE")
-    if not prof_dir:
-        yield
-        return
-    import jax
-
-    with jax.profiler.trace(os.path.join(prof_dir, label)):
-        yield
 
 
 def _timeit(fn, reps=3):
@@ -270,7 +254,7 @@ def _backend_speedup() -> tuple[list[tuple], list[dict]]:
         t0 = time.perf_counter()
         jx = run_batch(specs, backend="jax")
         t_cold = time.perf_counter() - t0
-        with _profiled(f"jax_d2^{dexp}"):
+        with profile_trace(f"jax_d2^{dexp}"):
             t0 = time.perf_counter()
             jx = run_batch(specs, backend="jax")
             t_jax = time.perf_counter() - t0
@@ -339,7 +323,7 @@ def fused_sweep() -> list[tuple]:
         for label, kw in (("unfused", {"fused": False}),
                           ("fused", {"fused": True})):
             run_batch(specs, backend="jax", **kw)          # compile
-            with _profiled(f"{label}_d2^{dexp}"):
+            with profile_trace(f"{label}_d2^{dexp}"):
                 best = float("inf")
                 for _ in range(2):          # min-of-2: tame host jitter
                     t0 = time.perf_counter()
@@ -413,7 +397,7 @@ def gram_sweep() -> list[tuple]:
         for label, kw in (("fused", {"fused": True}),
                           ("gram", {"data_plane": "gram"})):
             run_batch(specs, backend="jax", **kw)          # compile
-            with _profiled(f"gram_{label}_d2^{dexp}"):
+            with profile_trace(f"gram_{label}_d2^{dexp}"):
                 best = float("inf")
                 for _ in range(2):          # min-of-2: tame host jitter
                     t0 = time.perf_counter()
@@ -454,6 +438,57 @@ def gram_sweep() -> list[tuple]:
     rows.append(("gram[target_5x_at_1M_met]", 0.0,
                  str(all(r["target_met"] for r in sweep))))
     return rows
+
+
+def telemetry_overhead() -> list[tuple]:
+    """Observability acceptance bar: threading the protocol counters
+    through the scan carry (run_batch(..., telemetry=True)) must cost
+    < 5% warm wall-time on the fused d=2^16 sweep config, with the
+    primary outputs bitwise identical to the telemetry-off run."""
+    B = int(os.environ.get("REPRO_BENCH_TRIALS", "256"))
+    steps = int(os.environ.get("REPRO_BENCH_STEPS", "3"))
+    d = 1 << 16
+    specs = [
+        TrialSpec(byz=(2, 5), attack="drift", q=0.2, steps=steps,
+                  seed=s, n_data=64, d=d, label=f"tel/s{s}")
+        for s in range(B)
+    ]
+    timing = {}
+    res = {}
+    for label, tel in (("off", False), ("on", True)):
+        run_batch(specs, backend="jax", fused=True, telemetry=tel)  # compile
+        with profile_trace(f"telemetry_{label}"):
+            best = float("inf")
+            for _ in range(3):          # min-of-3: tame host jitter
+                t0 = time.perf_counter()
+                res[label] = run_batch(specs, backend="jax", fused=True,
+                                       telemetry=tel)
+                best = min(best, time.perf_counter() - t0)
+            timing[label] = best
+    off, on = res["off"], res["on"]
+    assert on.telemetry is not None and off.telemetry is None
+    # counters must be populated and self-consistent with the schedule
+    tot = on.telemetry.totals()
+    assert tot["steps"] == sum(s.steps for s in specs)
+    bitwise_ok = all(
+        bool(np.array_equal(np.asarray(a.w), np.asarray(b.w)))
+        for a, b in zip(off, on)
+    )
+    overhead_frac = timing["on"] / timing["off"] - 1.0
+    detail = {
+        "d": d, "trials": B, "steps": steps,
+        "off_s": timing["off"], "on_s": timing["on"],
+        "overhead_frac": overhead_frac, "bitwise_identical": bitwise_ok,
+        "target": 0.05, "target_met": bool(bitwise_ok
+                                           and overhead_frac < 0.05),
+        "totals": {k: int(v) for k, v in tot.items()},
+    }
+    _dump("telemetry_overhead", detail)
+    return [
+        ("telemetry[overhead_frac]", 0.0, f"{overhead_frac:+.4f}"),
+        ("telemetry[bitwise_identical]", 0.0, str(bitwise_ok)),
+        ("telemetry[target_lt_5pct_met]", 0.0, str(detail["target_met"])),
+    ]
 
 
 def schedule_build() -> list[tuple]:
@@ -684,4 +719,5 @@ def _dump(name: str, obj) -> None:
 
 ALL = [efficiency_vs_q, scheme_comparison, identification_time,
        adaptive_trace, engine_speedup, fused_sweep, gram_sweep,
-       schedule_build, engine_devices, adaptive_sweep, fig2_code]
+       telemetry_overhead, schedule_build, engine_devices,
+       adaptive_sweep, fig2_code]

@@ -34,6 +34,37 @@ def _load_bench(name: str):
         return json.load(fh)
 
 
+def _provenance() -> dict:
+    """Stamp for refreshed sections: which software/hardware produced the
+    timings (jax/jaxlib versions, device kind and count, platform, git
+    commit) — so a BENCH_engine.json diff is interpretable months later
+    without spelunking CI logs."""
+    import platform
+    import subprocess
+
+    info: dict = {"python": platform.python_version(),
+                  "platform": platform.platform()}
+    try:
+        import jax
+        import jaxlib
+
+        devs = jax.devices()
+        info.update(jax=jax.__version__, jaxlib=jaxlib.__version__,
+                    backend=jax.default_backend(),
+                    device_kind=devs[0].device_kind,
+                    device_count=len(devs))
+    except Exception:                                     # noqa: BLE001
+        pass                  # provenance is best-effort, never fatal
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=_REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        info["git_commit"] = out.stdout.strip() or None
+    except Exception:                                     # noqa: BLE001
+        info["git_commit"] = None
+    return info
+
+
 # warm-timing regression gate: a refreshed row whose config matches the
 # committed BENCH_engine.json row must not be more than 10% slower.
 # Override with REPRO_BENCH_ALLOW_REGRESSION=1 (recorded in the summary,
@@ -73,6 +104,8 @@ def _guard_regressions(prev: dict, summary: dict) -> None:
         ("schedule_build", ("trials", "steps"), ["vector_s"]),
         ("fused", ("d", "trials", "steps"), ["fused_s", "unfused_s"]),
         ("gram", ("d", "trials", "steps"), ["gram_s", "fused_s"]),
+        ("telemetry_overhead", ("d", "trials", "steps"),
+         ["off_s", "on_s"]),
     ]
     for section, key, fields in plans:
         old_rows = _rows(prev, section, key)
@@ -130,6 +163,15 @@ def write_bench_engine() -> None:
     # retired field: the 3x-at-1M target graduated into the per-row
     # regression guard (and the gram plane moved the goalposts anyway)
     summary.pop("jax_target_3x_at_1M", None)
+    # provenance is computed once per run and stamped per *refreshed*
+    # section, so carried-over rows keep the stamp of the run that
+    # actually produced them
+    prov = _provenance()
+
+    def _stamp(*sections: str) -> None:
+        for s in sections:
+            summary.setdefault("meta", {})[s] = prov
+
     data = _load_bench("engine_speedup")
     if data is not None:
         sweep = data.get("backend_sweep", [])
@@ -145,21 +187,25 @@ def write_bench_engine() -> None:
                                  "control_parity", "value_parity")}
             for row in sweep
         ]
+        _stamp("serial_vs_engine", "numpy_vs_jax")
     adaptive = _load_bench("adaptive_sweep")
     if adaptive is not None:
         summary["adaptive"] = {
             **adaptive,
             "target_5x_met": adaptive.get("speedup", 0.0) >= 5.0,
         }
+        _stamp("adaptive")
     sched = _load_bench("schedule_build")
     if sched is not None:
         summary["schedule_build"] = {
             **sched,
             "target_3x_met": sched.get("speedup", 0.0) >= 3.0,
         }
+        _stamp("schedule_build")
     devices = _load_bench("engine_devices")
     if devices is not None:
         summary["devices_scaling"] = devices
+        _stamp("devices_scaling")
     fused = _load_bench("fused_sweep")
     if fused is not None:
         rows = fused.get("sweep", [])
@@ -171,6 +217,7 @@ def write_bench_engine() -> None:
             "target_met": all(r["target_met"] for r in rows) if rows
             else None,
         }
+        _stamp("fused")
     gram = _load_bench("gram_sweep")
     if gram is not None:
         rows = gram.get("sweep", [])
@@ -182,6 +229,11 @@ def write_bench_engine() -> None:
             "target_met": all(r["target_met"] for r in rows) if rows
             else None,
         }
+        _stamp("gram")
+    tel = _load_bench("telemetry_overhead")
+    if tel is not None:
+        summary["telemetry_overhead"] = tel
+        _stamp("telemetry_overhead")
     _guard_regressions(prev, summary)
     # atomic replace: an interrupted run (ctrl-C mid-dump, OOM-killed CI
     # job) must never truncate the merged results file
@@ -219,16 +271,27 @@ def main(argv=None) -> None:
                      + ", ".join(sorted(by_name)))
         suites = [by_name[args.only]]
     print("name,us_per_call,derived")
+    from repro.obs import trace as obtrace
+
     failures = 0
     for fn in suites:
         try:
-            for name, us, derived in fn():
-                print(f"{name},{us:.1f},{derived}", flush=True)
+            # span per suite fn (profile_trace itself is used inside the
+            # suites around the warm timed runs — nesting a second
+            # jax.profiler.trace here would fail, so the outer layer is
+            # span-only)
+            with obtrace.span(f"bench.{fn.__name__}"):
+                for name, us, derived in fn():
+                    print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{fn.__name__},0.0,ERROR:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     write_bench_engine()
+    trace_out = os.environ.get("REPRO_TRACE_OUT")
+    if trace_out:
+        obtrace.export_chrome(trace_out)
+        print(f"chrome trace: {trace_out}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

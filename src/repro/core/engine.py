@@ -71,6 +71,7 @@ from repro.core.assignment import (
 )
 from repro.core.identification import majority_vote_np
 from repro.core.randomized import BFTConfig, ProtocolState, decide_generator
+from repro.obs.telemetry import Telemetry, zero_counts
 
 # ---------------------------------------------------------------------------
 # Shared numerical primitives (used by BOTH run_protocol and the engine).
@@ -550,6 +551,9 @@ class BatchResult:
     # attribute, which the backend still mirrors for compatibility.
     # The numpy engine leaves it None.
     plan: "ExecutionPlan | None" = None
+    # run_batch(..., telemetry=True) only: per-trial protocol counters
+    # (repro.obs.telemetry.Telemetry) — identical across backends.
+    telemetry: "Telemetry | None" = None
 
     def __iter__(self):
         return iter(self.results)
@@ -616,7 +620,7 @@ class ScheduleRecorder:
 
 
 def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
-              rng: str = "host",
+              rng: str = "host", telemetry: bool = False,
               _recorder: "ScheduleRecorder | None" = None,
               **backend_kwargs) -> BatchResult:
     """Run B independent protocol trials in one vectorized pass.
@@ -627,6 +631,12 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
     protocol, one ``lax.scan`` over the whole iteration loop, exact on
     control quantities and float-tolerance-close on values; see
     docs/performance.md.
+
+    ``telemetry=True`` accumulates per-trial protocol counters
+    (detections, votes, eliminations, tamper events, the redundancy
+    overhead — see :mod:`repro.obs.telemetry`) into
+    ``BatchResult.telemetry`` on every backend and path; the primary
+    outputs are bitwise identical either way.
 
     ``rng`` selects the decision-stream contract of the numpy engine:
     ``"host"`` (default) is the legacy PCG64 streams shared with
@@ -652,7 +662,7 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
             raise ValueError(
                 'backend="jax" takes schedule="device" instead of '
                 'rng="device" (the device scan IS the device stream)')
-        return run_batch_jax(specs, **backend_kwargs)
+        return run_batch_jax(specs, telemetry=telemetry, **backend_kwargs)
     if backend != "numpy":
         raise ValueError(f"unknown engine backend {backend!r}")
     if backend_kwargs:
@@ -666,7 +676,9 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
     specs = [s if isinstance(s, TrialSpec) else TrialSpec(**s) for s in specs]
     B = len(specs)
     if B == 0:
-        return BatchResult([], [], 0.0)
+        return BatchResult([], [], 0.0,
+                           telemetry=Telemetry.from_counts(zero_counts(0))
+                           if telemetry else None)
 
     # -- problems (cached by (problem_seed, dims); trials share n_data, d) --
     dims = {(s.n_data, s.d) for s in specs}
@@ -777,6 +789,14 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
     losses_mat = np.zeros((B, T_max))
     q_trace_mat = np.zeros((B, T_max))
     last_q = np.zeros(B)
+    if telemetry:
+        # the oracle side of the cross-backend counter-equality contract
+        # (see repro.obs.telemetry for the per-key semantics)
+        tel_np = zero_counts(B)
+        byz_mask = np.zeros((B, n_max), bool)
+        for b, s in enumerate(specs):
+            if s.byz:
+                byz_mask[b, list(s.byz)] = True
 
     # residual fault budget per trial (f - kappa, floored at 0), kept as
     # an array so the adaptive/fixed-q hot paths never touch ProtocolState
@@ -987,6 +1007,8 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
                 if tam:
                     _apply_attacks(g2[None], np.zeros(len(tam), np.int64),
                                    np.asarray(tam), [tr], att_codes[b:b + 1])
+                    if telemetry:
+                        tel_np["tamper_events"][b] += len(tam)
                 if _recorder is not None:
                     k = len(ai.shard_of_worker)
                     rec_sh2[b, :k] = ai.shard_of_worker
@@ -1001,6 +1023,8 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
                     val, faulty, _ = majority_vote_np(g2[g], tau=1e-9)
                     votes.append(val)
                     newly |= {int(x) for x in g[faulty]}
+                if telemetry:
+                    tel_np["eliminations"][b] += len(newly)
                 if newly:
                     st.on_identified(np.asarray(sorted(newly)))
                     for w_id in newly:
@@ -1052,6 +1076,19 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
         check_acc += (checks | draco_mask) & live
         ident_acc += identified_t
         eff_hist[:, t] = used_t / np.maximum(1, comp_t)
+        if telemetry:
+            draco_live = draco_mask & live
+            tel_np["steps"] += live
+            tel_np["checks"] += checks
+            tel_np["redundant_steps"] += checks | draco_live
+            tel_np["detects"] += identified_t
+            tel_np["identify_rounds"] += identified_t
+            tel_np["vote_rounds"] += identified_t | draco_live
+            if hits is not None:
+                np.add.at(tel_np["tamper_events"], hits[0], 1)
+            # post-elimination, matching the recorder's `active` capture
+            tel_np["byz_active_steps"] += np.where(
+                live, (byz_mask & bstate.active).sum(axis=1), 0)
 
         grad_upd = aggregate(agg_weight, grads)
         for b, v in voted.items():
@@ -1079,7 +1116,14 @@ def run_batch(specs: list[TrialSpec], *, backend: str = "numpy",
             q_trace=q_trace_mat[b, :s.steps].tolist(),
             identify_step=tr.ident_step,
         ))
-    return BatchResult(specs, results, time.perf_counter() - t_start)
+    tel_obj = None
+    if telemetry:
+        tel_obj = Telemetry.from_counts(
+            tel_np, specs=specs,
+            q_traces=[q_trace_mat[b, :s.steps]
+                      for b, s in enumerate(specs)])
+    return BatchResult(specs, results, time.perf_counter() - t_start,
+                       telemetry=tel_obj)
 
 
 # ---------------------------------------------------------------------------

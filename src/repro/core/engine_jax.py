@@ -92,6 +92,8 @@ from repro.core.engineplan.stepcore import (
     jitted_step_core,
 )
 from repro.core.simulation import make_problem
+from repro.obs import metrics as obmetrics, trace as obtrace
+from repro.obs.telemetry import Telemetry
 
 _FILTER_CODES = planlib.FILTER_CODES
 
@@ -172,7 +174,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
                   chunk_trials: int | None = None,
                   mesh="auto", fused: bool | None = None,
                   stream_dtype: str = "f32",
-                  data_plane: str | None = None) -> BatchResult:
+                  data_plane: str | None = None,
+                  telemetry: bool = False) -> BatchResult:
     """Run B protocol trials with the jitted on-device data plane.
 
     schedule: "auto" | "vector" | "proxy" | "oracle" (host control
@@ -216,6 +219,12 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         arithmetic, so detection verdicts match the stream plane
         bit-for-bit; iterates/losses match at the documented f32
         tolerances.
+    telemetry: thread the protocol-counters pytree through the scan
+        carry (see :mod:`repro.obs.telemetry`) and return it as
+        ``BatchResult.telemetry``.  Opt-in and output-neutral: the
+        primary outputs are bitwise identical with it on, sharded runs
+        accumulate inside the per-trial shard (no new collectives), and
+        the counters are integer-identical to the numpy oracle's.
     chunk_trials: trials per device pass (default: memory-sized; only
         filter trials materialize a (chunk, n, d) gradient stack).
         Rounded up to a multiple of the mesh size; the last chunk is
@@ -263,7 +272,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         T = max(s.steps for s in specs)
         n_max = max(s.n for s in specs)
     else:
-        sched = build_schedule(specs, schedule)
+        with obtrace.span("engine.build_schedule", mode=mode, B=B):
+            sched = build_schedule(specs, schedule)
         T = len(sched.arrays["live"]) if sched.arrays else 0
         n_max = sched.arrays["shard1"].shape[2] if sched.arrays else 0
     if T == 0:
@@ -271,12 +281,12 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         # control pass would carry proxy-problem iterates — rerun the
         # numpy engine on the real specs (free at zero steps), keeping
         # the documented jax-backend extras attached (empty here)
-        out = run_batch(specs)
+        out = run_batch(specs, telemetry=telemetry)
         out.detect_flags = np.zeros((0, B), bool)
         out.plan = resolve_plan(
             specs, schedule=schedule, fused=fused,
             stream_dtype=stream_dtype, kernel_impl=kernel_impl,
-            data_plane=data_plane)
+            data_plane=data_plane, telemetry=telemetry)
         out.fused_used = False
         if device_mode:
             trace = dict(q=np.zeros((0, B), np.float32),
@@ -309,12 +319,17 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         ndev = None
 
     # -- resolve the execution plan (pure) and surface fused demotion -----
-    plan = resolve_plan(specs, schedule=schedule, fused=fused,
-                        n_devices=ndev, chunk_trials=chunk_trials,
-                        stream_dtype=stream_dtype,
-                        kernel_impl=kernel_impl, n_max=n_max,
-                        data_plane=data_plane)
-    planlib.warn_on_fallback(plan)
+    with obtrace.span("engine.resolve_plan", B=B):
+        plan = resolve_plan(specs, schedule=schedule, fused=fused,
+                            n_devices=ndev, chunk_trials=chunk_trials,
+                            stream_dtype=stream_dtype,
+                            kernel_impl=kernel_impl, n_max=n_max,
+                            data_plane=data_plane, telemetry=telemetry)
+        planlib.warn_on_fallback(plan)
+    obmetrics.counter("engine.batches").inc()
+    obmetrics.counter("engine.trials").inc(B)
+    obmetrics.counter(f"engine.plan.{plan.data_plane}"
+                      f".{plan.control}").inc()
     use_fused = plan.fused
     use_gram = plan.data_plane == "gram"
     shared = plan.shared_problem
@@ -392,6 +407,14 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             base_stat, fcode=fcode,
             farr=np.array([max(1, s.f) for s in specs], np.int32),
         )
+        if telemetry:
+            # the byz_active_steps counter needs the Byzantine mask,
+            # which only the device control plane stages otherwise
+            byz = np.zeros((B, n_max), bool)
+            for b, s in enumerate(specs):
+                if s.byz:
+                    byz[b, list(s.byz)] = True
+            stat_np["byz"] = byz
 
         # -- stacked schedule -> scan xs ----------------------------------
         a = sched.arrays
@@ -490,7 +513,8 @@ def run_batch_jax(specs, *, schedule: str = "auto",
         scan_fn = functools.partial(
             jitted_step_core, fused=use_fused, gram=use_gram,
             control=plan.control, shared=shared, has_filter=has_filter,
-            has_bias=has_bias, impl=kernel_impl)
+            has_bias=has_bias, impl=kernel_impl,
+            telemetry=plan.telemetry)
         # non-shared problems upload per-chunk slices in the pipeline —
         # a full (B, n_data, d) upfront copy would defeat the chunk
         # memory bound (the fused path reads A only through the
@@ -532,11 +556,15 @@ def run_batch_jax(specs, *, schedule: str = "auto",
                      put(noisevec, in_specs[7]))
 
     # -- async chunk pipeline (depth 1; see engineplan.pipeline) ----------
-    W, losses, det, extras = run_chunks(
-        scan_fn, plan, B=B, T=T, d=d, d_run=d_run, n_max=n_max,
-        mesh=mesh, in_specs=in_specs, A_np=A_np, y_np=y_np,
-        A_dev=A_dev, y_dev=y_dev, com_dev=com_dev, noise_dev=noise_dev,
-        pid_np=pid_np, stat_np=stat_np, xs_np=xs_np)
+    with obtrace.span("engine.scan", B=B, T=T,
+                      data_plane=plan.data_plane, control=plan.control):
+        W, losses, det, extras = run_chunks(
+            scan_fn, plan, B=B, T=T, d=d, d_run=d_run, n_max=n_max,
+            mesh=mesh, in_specs=in_specs, A_np=A_np, y_np=y_np,
+            A_dev=A_dev, y_dev=y_dev, com_dev=com_dev,
+            noise_dev=noise_dev, pid_np=pid_np, stat_np=stat_np,
+            xs_np=xs_np)
+    tel_counts = extras.pop("telemetry") if telemetry else None
 
     # -- materialize results: control plane + device values ---------------
     from repro.core.simulation import SimResult
@@ -564,8 +592,15 @@ def run_batch_jax(specs, *, schedule: str = "auto",
             q_trace=ctrl.q_trace,
             identify_step=ctrl.identify_step,
         ))
+    tel_obj = None
+    if telemetry:
+        tel_obj = Telemetry.from_counts(
+            tel_counts, specs=specs,
+            q_traces=[r.q_trace for r in results])
+        obmetrics.counter("engine.telemetry.steps").inc(
+            tel_obj.totals()["steps"])
     out = BatchResult(specs, results, time.perf_counter() - t_start,
-                      plan=plan)
+                      plan=plan, telemetry=tel_obj)
     out.detect_flags = det
     out.schedule = sched
     out.device_trace = trace

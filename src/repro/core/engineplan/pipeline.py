@@ -21,6 +21,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obtrace
+from repro.obs.telemetry import TEL_KEYS
+
 # per-array padding fill values: -1 marks idle workers / no-filter rows,
 # everything else pads to an inert zero trial (live=False, weights 0)
 PAD_FILL = {"group1": -1, "group2": -1, "fcode": -1, "farr": 1}
@@ -45,12 +48,14 @@ def run_chunks(scan_fn, plan, *, B: int, T: int, d: int, d_run: int,
     non-shared problems upload per-chunk slices of ``A_np``/``y_np``
     instead — a full (B, n_data, d) upfront copy would defeat the chunk
     memory bound.  Returns ``(W, losses, det, extras)`` where
-    ``extras`` is the device control plane's decision-trace dict
-    (q/check/faulty2) or ``None`` under a host schedule."""
+    ``extras`` is ``None`` or a dict holding the device control plane's
+    decision trace (q/check/faulty2) and/or the scan's telemetry
+    counters under ``"telemetry"``."""
     fused = plan.fused
     gram = plan.data_plane == "gram"
     coeff = fused or gram        # coefficient-plane paths stage cw0
     device_mode = plan.control == "device"
+    telemetry = getattr(plan, "telemetry", False)
     shared = plan.shared_problem
     ndev = plan.n_devices
     chunk_trials = plan.chunk_trials
@@ -77,6 +82,10 @@ def run_chunks(scan_fn, plan, *, B: int, T: int, d: int, d_run: int,
     def _stage(lo: int):
         """H2D-transfer one chunk's per-trial arrays (async)."""
         hi = min(lo + chunk_trials, B)
+        with obtrace.span("pipeline.stage", lo=lo, hi=hi):
+            return _stage_inner(lo, hi)
+
+    def _stage_inner(lo: int, hi: int):
         bs = hi - lo
         pad = (-bs) % ndev
         stat_c = {k: pad_rows(v[lo:hi], 0, pad, PAD_FILL.get(k, 0))
@@ -107,24 +116,32 @@ def run_chunks(scan_fn, plan, *, B: int, T: int, d: int, d_run: int,
         q_tr = np.empty((T, B), np.float32)
         check_tr = np.empty((T, B), bool)
         faulty2_tr = np.empty((T, B, n_max), bool)
+    if telemetry:
+        tel_acc = {k: np.zeros(B, np.int64) for k in TEL_KEYS}
 
     def _drain(sl, bs, out):                     # gathers; blocks
-        if device_mode:
-            Wc, lc, qc, cc, dc, fc = out
-            q_tr[:, sl] = np.asarray(qc)[:, :bs]
-            check_tr[:, sl] = np.asarray(cc)[:, :bs]
-            faulty2_tr[:, sl] = np.asarray(fc)[:, :bs]
-        else:
-            Wc, lc, dc = out
-        W[sl] = np.asarray(Wc, np.float64)[:bs, :d]
-        losses[:, sl] = np.asarray(lc, np.float64)[:, :bs]
-        det[:, sl] = np.asarray(dc)[:, :bs]
+        with obtrace.span("pipeline.drain", lo=sl.start, hi=sl.stop):
+            if telemetry:
+                out, telc = out[:-1], out[-1]
+                for k in TEL_KEYS:
+                    tel_acc[k][sl] = np.asarray(telc[k])[:bs]
+            if device_mode:
+                Wc, lc, qc, cc, dc, fc = out
+                q_tr[:, sl] = np.asarray(qc)[:, :bs]
+                check_tr[:, sl] = np.asarray(cc)[:, :bs]
+                faulty2_tr[:, sl] = np.asarray(fc)[:, :bs]
+            else:
+                Wc, lc, dc = out
+            W[sl] = np.asarray(Wc, np.float64)[:bs, :d]
+            losses[:, sl] = np.asarray(lc, np.float64)[:, :bs]
+            det[:, sl] = np.asarray(dc)[:, :bs]
 
     staged = _stage(0)
     inflight = None
     while staged is not None:
         sl, bs, args = staged
-        out = scan_fn(*args)                     # async dispatch
+        with obtrace.span("pipeline.dispatch", lo=sl.start, hi=sl.stop):
+            out = scan_fn(*args)                 # async dispatch
         nxt = sl.stop if sl.stop < B else None
         staged = _stage(nxt) if nxt is not None else None
         if inflight is not None:
@@ -133,6 +150,9 @@ def run_chunks(scan_fn, plan, *, B: int, T: int, d: int, d_run: int,
     if inflight is not None:
         _drain(*inflight)
 
-    extras = (dict(q=q_tr, check=check_tr, faulty2=faulty2_tr)
-              if device_mode else None)
-    return W, losses, det, extras
+    extras = {}
+    if device_mode:
+        extras.update(q=q_tr, check=check_tr, faulty2=faulty2_tr)
+    if telemetry:
+        extras["telemetry"] = tel_acc
+    return W, losses, det, extras or None

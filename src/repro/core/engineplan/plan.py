@@ -29,7 +29,8 @@ module import-free of the engine.
 from __future__ import annotations
 
 import dataclasses
-import warnings
+
+from repro.obs import oblog
 
 # affine attack table: g' = alpha * g + beta * 1 + nu * noisevec, where
 # noisevec is ATTACKS["noise"]'s fixed default_rng(0) draw.  Mirrors
@@ -277,6 +278,7 @@ class ExecutionPlan:
     data_plane: str = "stream"   # "gram" | "stream" (the scan's domain)
     data_plane_requested: str | None = None  # explicit; None = auto
     data_plane_reason: str = ""  # why gram engaged / why it could not
+    telemetry: bool = False      # thread protocol counters through scan
 
     def explain(self) -> str:
         """Human-readable account of which path was picked and why."""
@@ -333,7 +335,8 @@ def resolve_plan(specs, *, schedule: str = "auto",
                  stream_dtype: str = "f32",
                  kernel_impl: str | None = None,
                  n_max: int | None = None,
-                 data_plane: str | None = None) -> ExecutionPlan:
+                 data_plane: str | None = None,
+                 telemetry: bool = False) -> ExecutionPlan:
     """Resolve one batch's execution plan.  Pure: specs + knobs in,
     :class:`ExecutionPlan` out — no devices touched, so path selection
     is unit-testable for every spec class.
@@ -494,6 +497,7 @@ def resolve_plan(specs, *, schedule: str = "auto",
         kernel_impl=kernel_impl, n_trials=B, steps=steps,
         data_plane="gram" if use_gram else "stream",
         data_plane_requested=data_plane, data_plane_reason=gram_reason,
+        telemetry=telemetry,
     )
 
 
@@ -502,17 +506,26 @@ def warn_on_fallback(plan: ExecutionPlan, stacklevel: int = 3) -> None:
     path was demoted (the PR-7 debugging dead-end: the fallback used to
     be silent).  Fused demotions come out as the
     :class:`FusedFallbackWarning` subclass for back-compat filters.
-    Zero-step batches never warn — there is no scan at all."""
+    Zero-step batches never warn — there is no scan at all.
+
+    Routed through :func:`repro.obs.oblog.warn_once`: one warning per
+    distinct fallback reason per process (a sweep used to repeat it on
+    every ``run_batch`` call); tests re-arm via
+    ``oblog.reset_warn_once()``."""
     if plan.data_plane_requested == "gram" \
             and plan.data_plane != "gram" and plan.steps > 0:
-        warnings.warn(
+        oblog.warn_once(
             f'data_plane="gram" requested but the plan fell back to the '
             f"stream scan: {plan.data_plane_reason} "
             f"(see BatchResult.plan.explain())",
-            PlanFallbackWarning, stacklevel=stacklevel)
+            PlanFallbackWarning,
+            key=("gram_fallback", plan.data_plane_reason),
+            stacklevel=stacklevel)
     if plan.fused_requested is True and not plan.fused and plan.steps > 0:
-        warnings.warn(
+        oblog.warn_once(
             f"fused=True requested but the plan fell back to the "
             f"unfused scan: {plan.fallback_reason} "
             f"(see BatchResult.plan.explain())",
-            FusedFallbackWarning, stacklevel=stacklevel)
+            FusedFallbackWarning,
+            key=("fused_fallback", plan.fallback_reason),
+            stacklevel=stacklevel)

@@ -21,13 +21,14 @@ import functools
 import jax
 
 from repro.core.engineplan.stepcore import step_core
+from repro.obs.telemetry import TEL_KEYS
 
 
 @functools.lru_cache(maxsize=32)
 def _build(mesh, fused: bool, gram: bool, control: str, shared: bool,
            has_filter: bool, has_bias: bool, impl: str | None,
            stat_sig: tuple, xs_sig: tuple | None, com_sig: tuple,
-           a_ndim: int):
+           a_ndim: int, telemetry: bool = False):
     """Build (and cache) the shard_map-wrapped, jitted step core.
 
     The signature tuples carry (key, ndim) pairs so the in_specs trees
@@ -69,10 +70,14 @@ def _build(mesh, fused: bool, gram: bool, control: str, shared: bool,
                      ts(3, 1))
     else:
         out_specs = (ts(2, 0), ts(2, 1), ts(2, 1))
+    if telemetry:
+        # the (B,) counters accumulate inside each device's trial shard
+        # and stay sharded on the way out — no collective anywhere
+        out_specs = out_specs + ({k: ts(1, 0) for k in TEL_KEYS},)
     body = functools.partial(step_core, fused=fused, gram=gram,
                              control=control, shared=shared,
                              has_filter=has_filter, has_bias=has_bias,
-                             impl=impl)
+                             impl=impl, telemetry=telemetry)
     fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
                    axis_names={"trials"}, check_vma=False)
     return jax.jit(fn, donate_argnums=(2, 3, 4, 5)), in_specs
@@ -88,4 +93,5 @@ def shard_wrap(plan, mesh, *, stat_sig: tuple, xs_sig: tuple | None,
     return _build(mesh, plan.fused, plan.data_plane == "gram",
                   plan.control, plan.shared_problem,
                   plan.has_filter, plan.has_bias, plan.kernel_impl,
-                  stat_sig, xs_sig, com_sig, a_ndim)
+                  stat_sig, xs_sig, com_sig, a_ndim,
+                  getattr(plan, "telemetry", False))

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 
 from repro.core import adaptive, rngstream
 from repro.core.detection import detect_groups_batched
+from repro.obs.telemetry import TEL_KEYS
 
 TAU_VOTE = 1e-9       # matches majority_vote_np(tau=1e-9) in both engines
 TAU_DETECT = 1e-9     # matches the engine's absolute replica compare
@@ -133,7 +134,8 @@ def masked_mean(g, act):
 
 def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
               fused: bool, control: str, shared: bool, has_filter: bool,
-              has_bias: bool, impl: str | None, gram: bool = False):
+              has_bias: bool, impl: str | None, gram: bool = False,
+              telemetry: bool = False):
     """The protocol loop: scan the schedule (or the fused-in control
     plane) over iterations, configured by jit-static flags.
 
@@ -148,7 +150,12 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
     symbol-domain winners match the numpy engine's full-vector vote
     outside the detectability floor.  Nothing of shape (B, n, d) is
     ever materialized, except for the genuinely nonlinear
-    gradient-filter baselines (compiled only when present)."""
+    gradient-filter baselines (compiled only when present).
+
+    ``telemetry=True`` (jit-static) threads a ``{TEL_KEYS: (B,) int32}``
+    counters dict through the scan carry — a handful of masked integer
+    adds per step, no extra d-sized work, no effect on the primary
+    outputs — and appends it to the return tuple."""
     from repro.kernels import ops
 
     n_data = y.shape[-1]
@@ -248,7 +255,10 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
         def device_step(carry, c):
             # carry[0] is the (B, d) iterate W — or, on the gram plane,
             # the (B, Ie) coefficient matrix C with W = W0 - C @ rows
-            W, active, kappa = carry
+            if telemetry:
+                (W, active, kappa), tel = carry
+            else:
+                W, active, kappa = carry
             t = c["tix"]
             t32 = t.astype(jnp.uint32)
             live = t < stat["steps"]                          # (B,)
@@ -350,19 +360,56 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
                 W = W + fold_coeff(upd, live)
             else:
                 W = jnp.where(live[:, None], W - lr[:, None] * upd, W)
+            act_pre = active
             active = active & ~faulty2
             kappa = kappa + faulty2.sum(axis=1).astype(kappa.dtype)
-            return (W, active, kappa), (loss, jnp.where(live, q_t, 0.0),
-                                        check, det, faulty2)
+            new_carry = (W, active, kappa)
+            if telemetry:
+                # device control has no deterministic vote schedule, so
+                # redundant/vote/identify all trace back to the check
+                # coin.  Tamper coins fire unconditionally in the scan
+                # (counter RNG) — only hits on still-active workers are
+                # real injections (the oracle's streams draw for active
+                # byz only); byz_active counts post-elimination
+                # (recorder timing).
+                i32 = jnp.int32
+                det32 = det.astype(i32)
+                tel = {
+                    "steps": tel["steps"] + live.astype(i32),
+                    "checks": tel["checks"] + check.astype(i32),
+                    "redundant_steps": tel["redundant_steps"]
+                    + check.astype(i32),
+                    "detects": tel["detects"] + det32,
+                    "identify_rounds": tel["identify_rounds"] + det32,
+                    "vote_rounds": tel["vote_rounds"] + det32,
+                    "eliminations": tel["eliminations"]
+                    + faulty2.sum(axis=1).astype(i32),
+                    "tamper_events": tel["tamper_events"]
+                    + ((tam1 & act_pre).sum(axis=1)
+                       + (tam2 & act_pre).sum(axis=1)).astype(i32),
+                    "byz_active_steps": tel["byz_active_steps"]
+                    + (stat["byz"] & active
+                       & live[:, None]).sum(axis=1).astype(i32),
+                }
+                new_carry = (new_carry, tel)
+            return new_carry, (loss, jnp.where(live, q_t, 0.0),
+                               check, det, faulty2)
 
         init = (jnp.zeros_like(cw0) if gram else W0,
                 stat["act0"], jnp.zeros(B, jnp.int32))
-        (W, _, _), ys = jax.lax.scan(device_step, init, com)
+        if telemetry:
+            init = (init, {k: jnp.zeros(B, jnp.int32) for k in TEL_KEYS})
+            ((W, _, _), tel), ys = jax.lax.scan(device_step, init, com)
+        else:
+            (W, _, _), ys = jax.lax.scan(device_step, init, com)
+            tel = None
         if gram:
             # the only d-sized work of the whole run: W_T = W0 - C_T @ R
             W = W0 - jnp.dot(W, A["rows"].astype(jnp.float32),
                              preferred_element_type=jnp.float32)
         losses, q_tr, check_tr, det_tr, faulty2_tr = ys
+        if telemetry:
+            return W, losses, q_tr, check_tr, det_tr, faulty2_tr, tel
         return W, losses, q_tr, check_tr, det_tr, faulty2_tr
 
     # ---- host control plane: scan the precomputed schedule -------------
@@ -370,6 +417,8 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
     fcode, farr = stat["fcode"], stat["farr"]
 
     def host_step(carry, xc):
+        if telemetry:
+            carry, tel = carry
         if fused:
             W, cw = carry
             x, key_t = xc
@@ -413,7 +462,7 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
 
         # -- majority votes (draco every step; identify rounds rare) ---
         def vote_part(shard, group, m, tam, gate, skt=None, mask=None,
-                      cr=None):
+                      cr=None, count_elim=False):
             def compute(_):
                 if skt is None:
                     mask_, rows_ = shard_mask(shard, group, m, n_data)
@@ -423,19 +472,38 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
                 else:
                     mask_, cr_, skt_ = mask, cr, skt
                 gv = jnp.where(gate[:, None], group, -1)
-                wc, _ = ops.batched_vote(skt_, gv, tau=TAU_VOTE, impl=impl)
+                wc, faulty = ops.batched_vote(skt_, gv, tau=TAU_VOTE,
+                                              impl=impl)
                 coeff = jnp.where(gate[:, None],
                                   wc / jnp.maximum(m, 1)[:, None], 0.0)
-                return agg(coeff, tam, mask_, cr_)
+                out = agg(coeff, tam, mask_, cr_)
+                if count_elim:
+                    # the vote's outvoted workers are this step's
+                    # eliminations (the host schedule applied them when
+                    # building later steps; here we just count)
+                    elim = (gate[:, None] & faulty
+                            & (gv >= 0)).sum(axis=1).astype(jnp.int32)
+                    return out, elim
+                return out
 
-            return jax.lax.cond(gate.any(), compute,
-                                lambda _: upd_zeros(), None)
+            def skip(_):
+                if count_elim:
+                    return upd_zeros(), jnp.zeros(B, jnp.int32)
+                return upd_zeros()
+
+            return jax.lax.cond(gate.any(), compute, skip, None)
 
         upd = acc(upd, vote_part(x["shard1"], x["group1"], x["m1"],
                                  x["tam1"], x["vote1"], skt=skt1,
                                  mask=mask1, cr=cr1))
-        upd = acc(upd, vote_part(x["shard2"], x["group2"], x["m2"],
-                                 x["tam2"], x["identify"]))
+        if telemetry:
+            upd2, elim2 = vote_part(x["shard2"], x["group2"], x["m2"],
+                                    x["tam2"], x["identify"],
+                                    count_elim=True)
+        else:
+            upd2 = vote_part(x["shard2"], x["group2"], x["m2"],
+                             x["tam2"], x["identify"])
+        upd = acc(upd, upd2)
 
         # -- gradient-filter baselines (genuinely need the stack;
         #    the plan gate keeps them off the fused path) --------------
@@ -456,27 +524,66 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
             upd = jnp.where((fcode >= 0)[:, None], fupd, upd)
 
         if fused:
-            return (W, fold_coeff(upd, x["live"])), (loss, det)
-        if gram:
-            return W + fold_coeff(upd, x["live"]), (loss, det)
-        W = jnp.where(x["live"][:, None], W - lr[:, None] * upd, W)
-        return W, (loss, det)
+            new_carry = (W, fold_coeff(upd, x["live"]))
+        elif gram:
+            new_carry = W + fold_coeff(upd, x["live"])
+        else:
+            new_carry = jnp.where(x["live"][:, None],
+                                  W - lr[:, None] * upd, W)
+        if telemetry:
+            # the schedule already masked every event array by liveness,
+            # so the counters are straight masked sums of what the host
+            # recorder wrote — integer-exact against the numpy oracle
+            i32 = jnp.int32
+            tel = {
+                "steps": tel["steps"] + x["live"].astype(i32),
+                "checks": tel["checks"] + x["checks"].astype(i32),
+                "redundant_steps": tel["redundant_steps"]
+                + (x["checks"] | x["vote1"]).astype(i32),
+                "detects": tel["detects"] + det.astype(i32),
+                "identify_rounds": tel["identify_rounds"]
+                + x["identify"].astype(i32),
+                "vote_rounds": tel["vote_rounds"]
+                + (x["identify"] | x["vote1"]).astype(i32),
+                "eliminations": tel["eliminations"] + elim2,
+                "tamper_events": tel["tamper_events"]
+                + (x["tam1"].sum(axis=1)
+                   + x["tam2"].sum(axis=1)).astype(i32),
+                "byz_active_steps": tel["byz_active_steps"]
+                + (stat["byz"] & x["active"]
+                   & x["live"][:, None]).sum(axis=1).astype(i32),
+            }
+            return (new_carry, tel), (loss, det)
+        return new_carry, (loss, det)
 
     if fused:
-        (W, cw), (losses, det) = jax.lax.scan(host_step, (W0, cw0),
-                                              (xs, com["keys"]))
+        init = (W0, cw0)
+        xs_scan = (xs, com["keys"])
+    elif gram:
+        init = jnp.zeros_like(cw0)
+        xs_scan = (xs, com)
+    else:
+        init = W0
+        xs_scan = (xs, com)
+    if telemetry:
+        init = (init, {k: jnp.zeros(B, jnp.int32) for k in TEL_KEYS})
+        (fin, tel), (losses, det) = jax.lax.scan(host_step, init, xs_scan)
+    else:
+        fin, (losses, det) = jax.lax.scan(host_step, init, xs_scan)
+        tel = None
+    if fused:
+        W, cw = fin
         # the last step's update is still pending: one final contraction
         W = W - jnp.dot(cw, A.astype(jnp.float32),
                         preferred_element_type=jnp.float32)
-        return W, losses, det
-    if gram:
-        C, (losses, det) = jax.lax.scan(host_step, jnp.zeros_like(cw0),
-                                        (xs, com))
+    elif gram:
         # the only d-sized work of the whole run: W_T = W0 - C_T @ R
-        W = W0 - jnp.dot(C, A["rows"].astype(jnp.float32),
+        W = W0 - jnp.dot(fin, A["rows"].astype(jnp.float32),
                          preferred_element_type=jnp.float32)
-        return W, losses, det
-    W, (losses, det) = jax.lax.scan(host_step, W0, (xs, com))
+    else:
+        W = fin
+    if telemetry:
+        return W, losses, det, tel
     return W, losses, det
 
 
@@ -487,6 +594,6 @@ def step_core(A, y, W0, cw0, stat, xs, com, noisevec, pid, *,
 jitted_step_core = functools.partial(
     jax.jit,
     static_argnames=("fused", "control", "shared", "has_filter",
-                     "has_bias", "impl", "gram"),
+                     "has_bias", "impl", "gram", "telemetry"),
     donate_argnames=("W0", "cw0", "stat", "xs"),
 )(step_core)

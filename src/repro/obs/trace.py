@@ -1,0 +1,123 @@
+"""Host span tracing: lightweight wall-clock spans with Chrome-trace
+export, plus the ``profile_trace`` hook that generalizes the benchmark
+harness' old private ``_profiled`` helper.
+
+Spans record into a bounded in-process ring buffer (no I/O on the hot
+path, no background thread); :func:`export_chrome` writes the buffer as
+Chrome-trace JSON ("X" complete events) loadable in ``chrome://tracing``
+/ Perfetto.  ``profile_trace`` additionally nests
+``jax.profiler.trace(<dir>/<label>)`` when ``REPRO_PROFILE=<dir>`` is
+set (or an explicit ``profile_dir`` is passed) so kernel/HBM-level
+traces line up with the host spans — the single implementation shared
+by ``benchmarks/bench_protocol.py`` and ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import functools
+import json
+import os
+import threading
+import time
+
+
+class SpanTracer:
+    """Bounded ring buffer of completed spans."""
+
+    def __init__(self, maxlen: int = 65536):
+        self._lock = threading.Lock()
+        self._events: collections.deque = collections.deque(maxlen=maxlen)
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args):
+        """Record a wall-clock span around the enclosed block.
+
+        Extra keyword arguments land in the event's ``args`` dict
+        (small JSON-serializable values: chunk index, schedule mode)."""
+        t0 = time.perf_counter_ns()
+        try:
+            yield
+        finally:
+            dur = time.perf_counter_ns() - t0
+            ev = {"name": name, "ts_ns": t0, "dur_ns": dur,
+                  "tid": threading.get_ident()}
+            if args:
+                ev["args"] = args
+            with self._lock:
+                self._events.append(ev)
+
+    def traced(self, name: str | None = None):
+        """Decorator form of :meth:`span` (span name defaults to the
+        function's qualified name)."""
+        def deco(fn):
+            label = name or fn.__qualname__
+
+            @functools.wraps(fn)
+            def wrapper(*a, **kw):
+                with self.span(label):
+                    return fn(*a, **kw)
+
+            return wrapper
+
+        return deco
+
+    def spans(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+
+    def export_chrome(self, path: str) -> str:
+        """Write the buffered spans as Chrome-trace JSON ("X" events,
+        microsecond timestamps) and return the path."""
+        pid = os.getpid()
+        events = []
+        for ev in self.spans():
+            out = {"name": ev["name"], "ph": "X", "pid": pid,
+                   "tid": ev["tid"], "ts": ev["ts_ns"] / 1e3,
+                   "dur": ev["dur_ns"] / 1e3}
+            if "args" in ev:
+                out["args"] = ev["args"]
+            events.append(out)
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump({"traceEvents": events, "displayTimeUnit": "ms"},
+                      fh, indent=1)
+            fh.write("\n")
+        return path
+
+
+TRACER = SpanTracer()
+
+span = TRACER.span
+traced = TRACER.traced
+spans = TRACER.spans
+clear = TRACER.clear
+export_chrome = TRACER.export_chrome
+
+
+@contextlib.contextmanager
+def profile_trace(label: str, profile_dir: str | None = None):
+    """Span + opt-in ``jax.profiler.trace`` around the enclosed block.
+
+    Always records an obs span named ``label``.  When
+    ``REPRO_PROFILE=<dir>`` is set (or ``profile_dir`` is passed
+    explicitly), additionally wraps the block in
+    ``jax.profiler.trace(<dir>/<label>)`` so fused-vs-unfused HBM
+    traffic (and every kernel launch) is inspectable in TensorBoard /
+    Perfetto; without it, the profiler side is a no-op.
+    """
+    prof_dir = (os.environ.get("REPRO_PROFILE") if profile_dir is None
+                else profile_dir)
+    with TRACER.span(label, profiled=bool(prof_dir)):
+        if not prof_dir:
+            yield
+            return
+        import jax
+
+        with jax.profiler.trace(os.path.join(prof_dir, label)):
+            yield

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import detection
 from repro.models import model as M
+from repro.obs import metrics as obmetrics, trace as obtrace
 
 
 def serve_step(params, token, pos, cache, cfg):
@@ -100,13 +101,17 @@ class ServeEngine:
             pos = jnp.int32(S + i)
             if self.q_audit and self._rng.random() < self.q_audit:
                 key = jax.random.PRNGKey(self.seed + 1000 + i)
-                logits, full_cache, ok = jax.jit(
-                    lambda p, t, pos, c, key: audit_decode(
-                        p, t, pos, c, self.cfg, key=key
-                    )
-                )(self.params, tok, pos, full_cache, key)
+                with obtrace.span("serve.audit_decode", step=i):
+                    logits, full_cache, ok = jax.jit(
+                        lambda p, t, pos, c, key: audit_decode(
+                            p, t, pos, c, self.cfg, key=key
+                        )
+                    )(self.params, tok, pos, full_cache, key)
                 self.audits += 1
                 self.audit_failures += int(not bool(ok))
+                obmetrics.counter("serve.audits").inc()
+                if not bool(ok):
+                    obmetrics.counter("serve.audit_failures").inc()
             else:
                 logits, full_cache = self._decode(
                     self.params, tok, pos, full_cache

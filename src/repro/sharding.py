@@ -105,9 +105,12 @@ def trials_mesh(max_devices: int | None = None) -> Mesh | None:
     backend — the scenario engine's data-parallel axis (trials are
     embarrassingly parallel).  Returns None on single-device hosts
     (plain jit is strictly cheaper there)."""
+    from repro.obs import metrics as obmetrics
+
     devs = jax.local_devices()
     if max_devices is not None:
         devs = devs[:max(1, max_devices)]
+    obmetrics.gauge("sharding.local_devices").set(len(devs))
     if len(devs) <= 1:
         return None
     return make_mesh((len(devs),), ("trials",), devices=devs)

@@ -1,8 +1,21 @@
 import os
 import sys
 
+import pytest
+
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
 # tests and benches must see the real (single) device.  Multi-worker BFT
 # integration tests spawn subprocesses with their own XLA_FLAGS
 # (tests/test_bft_integration.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _reset_warn_once():
+    """Re-arm the obs warning dedup between tests: plan-fallback warnings
+    fire once per process, but pytest.warns assertions need each test to
+    see its own emission."""
+    from repro.obs import oblog
+
+    oblog.reset_warn_once()
+    yield

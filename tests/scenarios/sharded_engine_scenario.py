@@ -107,6 +107,41 @@ def main() -> None:
     same_ch = all(close(a, b) for a, b in zip(un, ch))
     print(f"RESULT chunk_pipeline_parity={same_ch}")
 
+    # -- telemetry across the mesh: protocol counters reduced inside the
+    #    per-trial shard (no new collectives); primary outputs must stay
+    #    bitwise identical to the telemetry-off sharded run and counters
+    #    must equal the numpy oracle's, padding sliced off -------------
+    np_tel = run_batch(specs, telemetry=True)
+    sh_tel = run_batch(specs, backend="jax", mesh=mesh, telemetry=True)
+    tel_bitwise = all(
+        bool(np.array_equal(np.asarray(a.w), np.asarray(b.w)))
+        for a, b in zip(sh, sh_tel))
+    tel_counts = all(
+        bool(np.array_equal(np_tel.telemetry.counters[k],
+                            sh_tel.telemetry.counters[k]))
+        for k in np_tel.telemetry.counters)
+    print(f"RESULT telemetry_sharded_bitwise={tel_bitwise}")
+    print(f"RESULT telemetry_sharded_counters={tel_counts}")
+
+    # through the chunked pipeline (telemetry accumulated per chunk,
+    # padded trials dropped) and on the on-device control plane
+    ch_tel = run_batch(specs, backend="jax", mesh=mesh, chunk_trials=9,
+                       telemetry=True)
+    tel_chunk = all(
+        bool(np.array_equal(np_tel.telemetry.counters[k],
+                            ch_tel.telemetry.counters[k]))
+        for k in np_tel.telemetry.counters)
+    print(f"RESULT telemetry_chunk_pipeline_counters={tel_chunk}")
+
+    np_dev = run_batch(specs, rng="device", telemetry=True)
+    sh_dev = run_batch(specs, backend="jax", schedule="device", mesh=mesh,
+                       telemetry=True)
+    tel_dev = all(
+        bool(np.array_equal(np_dev.telemetry.counters[k],
+                            sh_dev.telemetry.counters[k]))
+        for k in np_dev.telemetry.counters)
+    print(f"RESULT telemetry_sharded_device_counters={tel_dev}")
+
     # -- B smaller than the mesh (pure padding) ---------------------------
     tiny = run_batch(specs[:3], backend="jax", mesh=mesh)
     same_tiny = all(close(a, b) for a, b in zip(un[:3], tiny))

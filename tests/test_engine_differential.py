@@ -149,22 +149,34 @@ def _assert_floats_close(spec, rn, rj):
                                err_msg=str(spec))
 
 
+def _assert_telemetry_equal(npb, jxb):
+    """Protocol counters are control quantities: the jax scan's per-step
+    telemetry must equal the numpy engine's host-side counts EXACTLY,
+    key by key, trial by trial."""
+    tn, tj = npb.telemetry, jxb.telemetry
+    assert tn is not None and tj is not None
+    for k in tn.counters:
+        assert np.array_equal(tn.counters[k], tj.counters[k]), k
+
+
 def _check_host_streams(specs):
-    npb = run_batch(specs)
-    jxb = run_batch(specs, backend="jax")
+    npb = run_batch(specs, telemetry=True)
+    jxb = run_batch(specs, backend="jax", telemetry=True)
     for s, rn, rj in zip(specs, npb, jxb):
         _assert_control_equal(s, rn, rj, q_exact=True)
         _assert_floats_close(s, rn, rj)
+    _assert_telemetry_equal(npb, jxb)
 
 
 def _check_device_streams(specs):
     rec = ScheduleRecorder()
-    npb = run_batch(specs, rng="device", _recorder=rec)
-    jxb = run_batch(specs, backend="jax", schedule="device")
+    npb = run_batch(specs, rng="device", _recorder=rec, telemetry=True)
+    jxb = run_batch(specs, backend="jax", schedule="device", telemetry=True)
     for s, rn, rj in zip(specs, npb, jxb):
         adaptive = s.q is None and s.mode == "randomized"
         _assert_control_equal(s, rn, rj, q_exact=not adaptive)
         _assert_floats_close(s, rn, rj)
+    _assert_telemetry_equal(npb, jxb)
     # the reconstructed schedule must equal the numpy engine's recorded
     # one bit-for-bit (vote1 is draco-only and device mode has none)
     if rec.steps:
@@ -190,10 +202,11 @@ def _check_gram_plane(specs):
 
     from repro.core.engineplan.plan import PlanFallbackWarning
 
-    npb = run_batch(specs)
+    npb = run_batch(specs, telemetry=True)
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", PlanFallbackWarning)
-        jxb = run_batch(specs, backend="jax", data_plane="gram")
+        jxb = run_batch(specs, backend="jax", data_plane="gram",
+                        telemetry=True)
     if max(s.steps for s in specs) == 0:
         assert jxb.plan.data_plane == "stream"
     else:
@@ -201,6 +214,7 @@ def _check_gram_plane(specs):
     for s, rn, rj in zip(specs, npb, jxb):
         _assert_control_equal(s, rn, rj, q_exact=True)
         _assert_floats_close(s, rn, rj)
+    _assert_telemetry_equal(npb, jxb)
 
 
 # ---------------------------------------------------------------------------

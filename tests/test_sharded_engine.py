@@ -99,6 +99,19 @@ def test_chunk_pipeline_and_padding(results):
 
 
 @pytest.mark.slow
+def test_telemetry_sharded_parity(results):
+    """Telemetry counters across the 8-device mesh: reduced inside the
+    per-trial shard, equal to the numpy oracle, with the primary outputs
+    bitwise identical to the telemetry-off sharded run — on the host
+    control plane, through the chunked pipeline, and on the on-device
+    control plane."""
+    assert results["telemetry_sharded_bitwise"] is True
+    assert results["telemetry_sharded_counters"] is True
+    assert results["telemetry_chunk_pipeline_counters"] is True
+    assert results["telemetry_sharded_device_counters"] is True
+
+
+@pytest.mark.slow
 def test_ops_sharding_aware_pallas_dispatch(results):
     """Under an ambient trials mesh, batched Pallas ops shard over the
     leading trial axis (kernels/ops._shard_batched) and match the XLA
